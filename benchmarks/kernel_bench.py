@@ -1,0 +1,101 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode, so
+wall-clock here measures the *reference jnp paths* (the production numbers
+are the §Roofline terms); interpret-mode kernels are validated, not timed.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import chunked_attention, naive_attention
+from repro.models.rwkv import wkv6_chunked, wkv6_reference
+
+Row = Tuple[str, float, str]
+
+
+def _timeit(fn, n=5):
+    out = jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def attention_paths() -> List[Row]:
+    rows = []
+    key = jax.random.key(0)
+    B, H, dh = 1, 4, 64
+    for S in (256, 1024):
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, S, H, dh), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, H, dh), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, H, dh), jnp.float32)
+        pos = jnp.arange(S)
+        naive = jax.jit(lambda q, k, v: naive_attention(
+            q, k, v, causal=True, window=None, q_positions=pos,
+            k_positions=pos))
+        chunk = jax.jit(lambda q, k, v: chunked_attention(
+            q, k, v, causal=True, window=None, q_positions=pos,
+            k_positions=pos, q_block=256, k_block=256))
+        us_n = _timeit(lambda: naive(q, k, v))
+        us_c = _timeit(lambda: chunk(q, k, v))
+        flops = 4.0 * B * H * S * S * dh / 2  # causal
+        rows.append((f"attn_naive_S{S}", us_n,
+                     f"gflops={flops/us_n/1e3:.2f}"))
+        rows.append((f"attn_chunked_S{S}", us_c,
+                     f"gflops={flops/us_c/1e3:.2f}"))
+    return rows
+
+
+def wkv_paths() -> List[Row]:
+    rows = []
+    key = jax.random.key(0)
+    B, H, T, dh = 1, 4, 512, 64
+    ks = jax.random.split(key, 5)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, dh)) for i in range(3))
+    w = jax.random.uniform(ks[3], (B, T, H, dh), minval=0.9, maxval=0.999)
+    u = jax.random.normal(ks[4], (H, dh)) * 0.3
+    seq = jax.jit(lambda r, k, v, w: wkv6_reference(r, k, v, w, u)[0])
+    chunked = jax.jit(lambda r, k, v, w: wkv6_chunked(
+        r, k, v, w, u, jnp.zeros((B, H, dh, dh)), chunk=32)[0])
+    us_s = _timeit(lambda: seq(r, k, v, w), n=3)
+    us_c = _timeit(lambda: chunked(r, k, v, w), n=3)
+    rows.append((f"wkv6_sequential_T{T}", us_s, "path=lax.scan/token"))
+    rows.append((f"wkv6_chunked_T{T}", us_c,
+                 f"path=matmul/chunk;speedup={us_s/us_c:.2f}x"))
+    return rows
+
+
+def train_step_bench() -> List[Row]:
+    from repro.configs import get_arch
+    from repro.data import DataConfig, device_batch
+    from repro.optim import AdamWConfig, init_opt_state
+    from repro.models import build
+    from repro.train import make_train_step
+    cfg = get_arch("st-100m").smoke
+    api = build(cfg)
+    params, _ = api.init(jax.random.key(0))
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(cfg, AdamWConfig()))
+    batch = device_batch(DataConfig(seq_len=64, global_batch=4,
+                                    vocab=cfg.vocab), 0)
+    p, o = params, opt
+
+    def run():
+        nonlocal p, o
+        p, o, m = step(p, o, batch)
+        return m["loss"]
+
+    us = _timeit(run, n=5)
+    toks = 4 * 64
+    return [("train_step_smoke", us, f"tokens_per_s={toks/us*1e6:.0f}")]
+
+
+def all_rows() -> List[Row]:
+    return attention_paths() + wkv_paths() + train_step_bench()

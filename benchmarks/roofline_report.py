@@ -1,0 +1,48 @@
+"""Roofline summary benchmark: reads the dry-run sweep results (if present
+under results/) and emits one row per (arch × shape) cell with the three
+terms — the framework-side 'table' feeding EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+RESULTS_GLOB = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results", "*.json")
+
+
+def load_cells() -> List[dict]:
+    cells = {}
+    for path in sorted(glob.glob(RESULTS_GLOB)):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except Exception:
+            continue
+        if isinstance(data, dict):
+            data = [data]
+        for r in data:
+            if r.get("ok") and "roofline" in r:
+                cells[(r["arch"], r["shape"], r["mesh"])] = r
+    return [cells[k] for k in sorted(cells)]
+
+
+def all_rows() -> List[Row]:
+    rows: List[Row] = []
+    for r in load_cells():
+        t = r["roofline"]
+        derived = (f"mesh={r['mesh']};dominant={t['dominant']};"
+                   f"compute_s={t['compute_s']:.3e};"
+                   f"memory_s={t['memory_s']:.3e};"
+                   f"collective_s={t['collective_s']:.3e};"
+                   f"useful={t['useful_ratio']:.3f};"
+                   f"roofline={100*t['roofline_fraction']:.1f}%")
+        rows.append((f"roofline_{r['arch']}_{r['shape']}",
+                     t["bound_s"] * 1e6, derived))
+    if not rows:
+        rows.append(("roofline_summary", 0.0,
+                     "no dry-run results found (run repro.launch.dryrun)"))
+    return rows

@@ -1,0 +1,31 @@
+"""Benchmark harness: one function per paper table/figure plus kernel and
+roofline reports.  Prints ``name,us_per_call,derived`` CSV.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only paper|kernels|roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=["paper", "kernels", "roofline"],
+                    default=None)
+    args = ap.parse_args()
+    from benchmarks import kernel_bench, paper_tables, roofline_report
+    rows = []
+    if args.only in (None, "paper"):
+        rows += paper_tables.all_rows()
+    if args.only in (None, "kernels"):
+        rows += kernel_bench.all_rows()
+    if args.only in (None, "roofline"):
+        rows += roofline_report.all_rows()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == '__main__':
+    main()

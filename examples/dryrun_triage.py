@@ -1,0 +1,33 @@
+"""Perf triage of a dry-run cell with the paper's disparity machinery:
+per-phase static costs -> CRNM severity bands -> rough-set root causes.
+Self-contained on CPU with 8 placeholder devices.
+
+    PYTHONPATH=src python examples/dryrun_triage.py [--arch chatglm3-6b]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="chatglm3-6b")
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    from repro.configs import get_arch
+    import repro.configs.base as base
+    from repro.launch.mesh import make_mesh
+    from repro.launch.static_analyzer import report_cell
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    shape = base.InputShape("triage", args.seq, args.batch, "train")
+    cfg = get_arch(args.arch).smoke.with_(dtype="float32",
+                                          param_dtype="float32")
+    print(report_cell(cfg, shape, mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""MoE expert-load imbalance detected by the paper's dissimilarity
+analysis, and fixed by the aux-loss knob — the framework-native analogue of
+ST's dynamic load dispatching (DESIGN.md §4).
+
+Experts play the role of the paper's processes: each expert's per-layer
+token-count vector is a performance vector; routing collapse shows up as
+multiple OPTICS clusters.
+
+    PYTHONPATH=src python examples/moe_imbalance.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import MoEConfig, get_arch
+from repro.core import RegionTree, find_dissimilarity_bottlenecks
+from repro.data import DataConfig
+from repro.optim import AdamWConfig
+from repro.train import Trainer, TrainerConfig
+
+
+def expert_load_clusters(history, n_experts):
+    """Per-expert vectors over (layers × recent steps) -> OPTICS pass."""
+    counts = [h["expert_counts"] for h in history if "expert_counts" in h]
+    if not counts:
+        return None
+    mat = np.stack(counts[-8:])           # (steps, L, E)
+    vecs = mat.transpose(2, 0, 1).reshape(n_experts, -1).astype(np.float64)
+    tree = RegionTree("moe")
+    rids = []
+    for j in range(vecs.shape[1]):
+        rids.append(tree.add(f"slot{j}").region_id)
+    return find_dissimilarity_bottlenecks(tree, vecs, rids)
+
+
+def run(aux_weight: float, steps: int = 40):
+    base = get_arch("mixtral-8x22b").smoke
+    cfg = base.with_(moe=MoEConfig(
+        n_experts=4, top_k=2, n_shared=0, d_ff=64, capacity_factor=2.0,
+        sharding="tp", aux_loss_weight=aux_weight))
+    trainer = Trainer(
+        cfg, AdamWConfig(lr=1e-2, warmup_steps=2, total_steps=steps),
+        DataConfig(seq_len=32, global_batch=4, vocab=cfg.vocab),
+        TrainerConfig(steps=steps, ckpt_dir=None, seed=0))
+    # inject a routing collapse: bias every router strongly toward expert 0
+    p = trainer.params
+    router = p["layers"]["moe"]["router"]
+    p["layers"]["moe"]["router"] = router.at[..., 0].add(3.0)
+    hist = trainer.run()
+    rep = expert_load_clusters(hist[:4], cfg.moe.n_experts)
+
+    def cv_at(h):
+        loads = h["expert_counts"].sum(axis=0)
+        return float(loads.std() / loads.mean())
+
+    return rep, cv_at(hist[0]), cv_at(hist[-1]), hist[-1]["loss"]
+
+
+def main():
+    print("== aux_loss_weight = 0 (no load balancing) ==")
+    rep0, cv0_start, cv0_end, loss0 = run(0.0)
+    print(f"expert-load clusters (early steps): {rep0.baseline.n_clusters}")
+    print(f"load CV: start {cv0_start:.3f} -> end {cv0_end:.3f}  "
+          f"loss {loss0:.3f}")
+    if rep0.exists:
+        print("-> dissimilarity bottleneck: expert load imbalance detected "
+              "(the paper's ST scenario, expert-parallel form)")
+
+    print("\n== aux_loss_weight = 0.05 (the paper's 'dynamic dispatching' "
+          "fix, MoE-style) ==")
+    rep1, cv1_start, cv1_end, loss1 = run(0.05)
+    print(f"load CV: start {cv1_start:.3f} -> end {cv1_end:.3f}  "
+          f"loss {loss1:.3f}")
+    print(f"\nwith the aux loss the collapse recovers faster/further: "
+          f"{cv0_end:.3f} (no aux) vs {cv1_end:.3f} (aux)")
+
+
+if __name__ == "__main__":
+    main()

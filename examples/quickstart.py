@@ -1,0 +1,59 @@
+"""Quickstart: train a small LM for a few steps with AutoAnalyzer attached,
+then print the paper-style performance-debugging report.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs import get_arch
+from repro.core import AutoAnalyzer, RegionTree, TimedRegionRunner, render
+from repro.data import DataConfig
+from repro.optim import AdamWConfig
+from repro.train import Trainer, TrainerConfig
+
+
+def main():
+    cfg = get_arch("st-100m").smoke
+    trainer = Trainer(
+        cfg,
+        AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=30),
+        DataConfig(seq_len=64, global_batch=4, vocab=cfg.vocab),
+        TrainerConfig(steps=30, ckpt_dir=None),
+    )
+    hist = trainer.run()
+    print(f"trained {len(hist)} steps: "
+          f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+    # -- AutoAnalyzer over an instrumented region tree --------------------
+    # Regions = the step phases; shards emulate SPMD processes.
+    tree = RegionTree("train_step")
+    api = trainer.api
+
+    def fwd_embed(state, batch):
+        from repro.models.layers import embed
+        return embed(state["params"]["embed"], cfg, batch["tokens"])
+
+    def loss_region(state, batch):
+        loss, _ = api.loss_fn(state["params"], batch)
+        return loss
+
+    tree.add("embed", fn=lambda s, b: (s, fwd_embed(s, b))[0])
+    tree.add("loss", fn=lambda s, b: (s, loss_region(s, b))[0])
+
+    from repro.data import device_batch
+    shards = 4
+    dcfg = DataConfig(seq_len=64, global_batch=shards, vocab=cfg.vocab)
+    batches = [
+        {k: v[i:i + 1] for k, v in device_batch(dcfg, 0).items()}
+        for i in range(shards)
+    ]
+    states = [{"params": trainer.params} for _ in range(shards)]
+    runner = TimedRegionRunner(tree)
+    rm = runner.run(states, batches)
+    res = AutoAnalyzer(tree).analyze(rm)
+    print()
+    print(render(tree, res))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""End-to-end driver: train the ~100M-parameter 'st-100m' config (the
+paper-workload analogue) for a few hundred steps with checkpointing,
+straggler monitoring, and a periodic AutoAnalyzer pass.
+
+CPU-sized invocation (reduced tokens/step; the config is the full 100M):
+
+    PYTHONPATH=src python examples/train_100m.py --steps 200 \
+        --batch 2 --seq 128
+
+Full production shapes go through repro.launch.train / dryrun instead.
+"""
+import argparse
+import json
+
+from repro.configs import get_arch
+from repro.data import DataConfig
+from repro.optim import AdamWConfig
+from repro.train import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the tiny config instead of the 100M one")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+
+    entry = get_arch("st-100m")
+    cfg = entry.smoke if args.smoke else entry.full
+    trainer = Trainer(
+        cfg,
+        AdamWConfig(lr=6e-4, warmup_steps=max(args.steps // 20, 1),
+                    total_steps=args.steps),
+        DataConfig(seq_len=args.seq, global_batch=args.batch,
+                   vocab=cfg.vocab),
+        TrainerConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=max(args.steps // 4, 1)),
+    )
+    if trainer.maybe_resume():
+        print(f"resumed from step {trainer.step}")
+    hist = trainer.run()
+    for h in hist:
+        if h["step"] % max(args.steps // 10, 1) == 0:
+            print(f"step {h['step']:5d}  loss {h['loss']:.4f}  "
+                  f"{h['seconds']*1e3:7.1f} ms")
+    print(json.dumps({
+        "params": sum(x.size for x in __import__("jax").tree.leaves(
+            trainer.params)),
+        "first_loss": hist[0]["loss"],
+        "final_loss": hist[-1]["loss"],
+        "straggler_events": trainer.monitor.events,
+    }, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the sweep
+JSONs.  Usage:
+    PYTHONPATH=src python scripts/render_experiments.py
+prints markdown to stdout (appended to EXPERIMENTS.md by the build step).
+"""
+import json
+import sys
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return []
+
+
+def dryrun_table(rows, title):
+    out = [f"### {title}", ""]
+    out.append("| arch | shape | mesh | ok | compile_s | args GB/dev | "
+               "temp GB/dev | collectives (production, per scan-body) |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if not r.get("ok"):
+            out.append(f"| {r['arch']} | {r['shape']} | - | **FAIL** | - |"
+                       f" - | - | {r.get('error','')[:60]} |")
+            continue
+        mem = r.get("memory", {})
+        coll = r.get("production_cost_raw", {}).get("coll_counts", {})
+        cstr = " ".join(f"{k.split('-')[-1][:3]}:{v}"
+                        for k, v in sorted(coll.items()))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | yes | "
+            f"{r.get('compile_s', 0):.1f} | "
+            f"{mem.get('argument_size_in_bytes', 0)/1e9:.1f} | "
+            f"{mem.get('temp_size_in_bytes', 0)/1e9:.1f} | {cstr} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows):
+    out = ["| arch | shape | compute_s | memory_s | collective_s | "
+           "dominant | MODEL_FLOPS | useful | roofline% | one-line next-step |"]
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    hints = {
+        "compute": "increase arithmetic intensity / larger per-chip batch",
+        "memory": "fuse ops on TPU (flash/WKV kernels), shrink saved "
+                  "activations (SP), bf16 end-to-end",
+        "collective": "reshard to cut cross-shard traffic; overlap "
+                      "collectives with compute",
+    }
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if not r.get("ok") or "roofline" not in r:
+            continue
+        t = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3e} | "
+            f"{t['memory_s']:.3e} | {t['collective_s']:.3e} | "
+            f"**{t['dominant']}** | {r['model_flops']:.2e} | "
+            f"{t['useful_ratio']:.2f} | {100*t['roofline_fraction']:.1f}% | "
+            f"{hints[t['dominant']]} |")
+    return "\n".join(out)
+
+
+def main():
+    single = load("results/dryrun_single_pod_optimized.json")
+    multi = load("results/dryrun_multi_pod_optimized.json")
+    base = load("results/dryrun_single_pod_baseline.json")
+    print(dryrun_table(single, "Single pod (16×16 = 256 chips), optimized "
+                       "defaults"))
+    print()
+    print(dryrun_table(multi, "Multi-pod (2×16×16 = 512 chips), production "
+                       "pass"))
+    print()
+    print("### Roofline — optimized defaults (single pod; per-chip terms)")
+    print()
+    print(roofline_table(single))
+    print()
+    print("### Roofline — paper-faithful baseline (pre-optimization)")
+    print()
+    print(roofline_table(base))
+
+
+if __name__ == "__main__":
+    main()

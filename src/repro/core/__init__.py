@@ -1,0 +1,33 @@
+"""AutoAnalyzer core: the paper's contribution as a composable JAX module.
+
+Public API:
+  RegionTree / CodeRegion        — code-region tree (paper §2)
+  RegionMetrics                  — per-(shard, region) measurements
+  optics_cluster / kmeans_severity — the two clustering algorithms (§4.2)
+  find_dissimilarity_bottlenecks / find_disparity_bottlenecks — §4.3
+  DecisionTable                  — rough-set root causes (§4.4)
+  AutoAnalyzer                   — end-to-end orchestration
+  collectors                     — runtime / static / synthetic backends
+"""
+from .analyzer import ATTRIBUTE_MEANING, AnalysisResult, AutoAnalyzer
+from .clustering import (HIGH, LOW, MEDIUM, SEVERITY_NAMES, VERY_HIGH,
+                         VERY_LOW, ClusterResult, dissimilarity_severity,
+                         is_similar, kmeans_1d, kmeans_severity,
+                         optics_cluster)
+from .collector import (RegionBehavior, SyntheticWorkload, TimedRegionRunner,
+                        static_metrics_from_costs)
+from .hlo import (COLLECTIVE_OPS, TPU_V5E, CollectiveStats, HardwareSpec,
+                  RooflineTerms, cost_analysis_of, parse_collectives,
+                  roofline_terms, shape_bytes)
+from .metrics import (BYTES, COMM_BYTES, COMM_TIME, CPU_TIME,
+                      DECISION_ATTRIBUTES, FLOPS, HBM_INTENSITY, HOST_BYTES,
+                      RAW_METRICS, VMEM_PRESSURE, WALL_TIME, RegionMetrics)
+from .regions import CodeRegion, RegionTree, st_region_tree
+from .report import render
+from .roughset import (DecisionTable, format_matrix, paper_table2,
+                       paper_table3, paper_table4)
+from .search import (DisparityReport, DissimilarityReport,
+                     find_disparity_bottlenecks,
+                     find_dissimilarity_bottlenecks, severity_banding)
+
+__all__ = [name for name in dir() if not name.startswith("_")]

@@ -1,0 +1,173 @@
+"""AutoAnalyzer orchestration (paper §4, Fig. 4-6).
+
+Pipeline per analysis:
+  1. similarity pass (simplified OPTICS over per-process vectors)
+  2. dissimilarity bottleneck search (Algorithm 2) + rough-set root causes
+     (decision table of Fig. 4: per-process per-metric cluster ids)
+  3. disparity pass (CRNM -> k-means severity -> CCR/CCCR) + rough-set root
+     causes (decision table of Fig. 5: binarised per-region severities)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Sequence
+
+import numpy as np
+
+from .clustering import HIGH, MEDIUM, kmeans_severity, optics_cluster
+from .metrics import (COMM_BYTES, CPU_TIME, DECISION_ATTRIBUTES, FLOPS,
+                      HBM_INTENSITY, HOST_BYTES, VMEM_PRESSURE, WALL_TIME,
+                      RegionMetrics)
+from .regions import RegionTree
+from .roughset import DecisionTable
+from .search import (DisparityReport, DissimilarityReport,
+                     find_disparity_bottlenecks,
+                     find_dissimilarity_bottlenecks)
+
+# Human-readable root-cause names for the five attributes (paper a1..a5,
+# TPU-adapted; DESIGN.md §2).
+ATTRIBUTE_MEANING = {
+    VMEM_PRESSURE: "high VMEM pressure (L1-miss-rate analogue)",
+    HBM_INTENSITY: "high HBM traffic per flop (L2-miss-rate analogue)",
+    HOST_BYTES: "high host/disk I/O quantity",
+    COMM_BYTES: "high collective/network I/O quantity",
+    FLOPS: "high quantity of instructions retired (FLOPs)",
+}
+
+
+@dataclasses.dataclass
+class AnalysisResult:
+    dissimilarity: DissimilarityReport
+    disparity: DisparityReport
+    dissimilarity_table: Optional[DecisionTable]
+    disparity_table: Optional[DecisionTable]
+    dissimilarity_causes: List[FrozenSet[str]]
+    disparity_causes: List[FrozenSet[str]]
+    per_region_causes: Dict[int, List[str]]
+    metric_used: str = CPU_TIME
+
+    def has_bottlenecks(self) -> bool:
+        return self.dissimilarity.exists or bool(self.disparity.ccrs)
+
+
+class AutoAnalyzer:
+    """The analysis engine.  Stateless w.r.t. collection: callers hand it a
+    :class:`RegionMetrics` (runtime, static or synthetic backend)."""
+
+    def __init__(self, tree: RegionTree,
+                 similarity_metric: str = CPU_TIME,
+                 disparity_metric: str = "crnm",
+                 attributes: Sequence[str] = tuple(DECISION_ATTRIBUTES),
+                 peak_flops_per_s: Optional[float] = None):
+        self.tree = tree
+        self.similarity_metric = similarity_metric
+        self.disparity_metric = disparity_metric
+        self.attributes = list(attributes)
+        self.peak = peak_flops_per_s
+
+    # -- passes -----------------------------------------------------------
+    def analyze(self, rm: RegionMetrics) -> AnalysisResult:
+        rids = [r for r in rm.region_ids
+                if not self._is_management(r)]
+        dis = self._dissimilarity_pass(rm, rids)
+        disp = self._disparity_pass(rm, rids)
+        dis_table = dis_causes = None
+        if dis.exists:
+            dis_table = self._dissimilarity_table(rm, rids)
+            dis_causes = dis_table.reducts()
+        disp_table = self._disparity_table(rm, rids, disp)
+        # Root causes: per-bottleneck discernibility functions (the paper
+        # 'searches the decision table' per region) — the union of each
+        # bottleneck's minimal hitting attributes with a positive value.
+        per_region: Dict[int, List[str]] = {}
+        union: set = set()
+        for rid in disp.ccrs:
+            idx = disp_table.object_ids.index(rid)
+            reds = disp_table.object_reducts(idx)
+            row = disp_table.rows[idx]
+            pos = {a for red in reds for a in red
+                   if row[disp_table.attributes.index(a)]}
+            union |= pos
+            per_region[rid] = [ATTRIBUTE_MEANING.get(a, a)
+                               for a in sorted(pos)]
+        disp_causes = [frozenset(union)] if union else []
+        return AnalysisResult(
+            dissimilarity=dis,
+            disparity=disp,
+            dissimilarity_table=dis_table,
+            disparity_table=disp_table,
+            dissimilarity_causes=dis_causes or [],
+            disparity_causes=disp_causes,
+            per_region_causes=per_region,
+            metric_used=self.similarity_metric,
+        )
+
+    def _is_management(self, rid: int) -> bool:
+        try:
+            return self.tree[rid].management
+        except KeyError:
+            return False
+
+    def _dissimilarity_pass(self, rm: RegionMetrics,
+                            rids: List[int]) -> DissimilarityReport:
+        T = rm.vectors(self.similarity_metric, rids)
+        return find_dissimilarity_bottlenecks(self.tree, T, rids)
+
+    def _disparity_values(self, rm: RegionMetrics,
+                          rids: List[int]) -> np.ndarray:
+        if self.disparity_metric == "crnm":
+            return rm.crnm_all(rids, self.peak)
+        if self.disparity_metric == "cpi":
+            return rm.cpi_all(rids, self.peak)
+        if self.disparity_metric == WALL_TIME:
+            return rm.wall_all(rids)
+        return np.array([rm.region_mean(self.disparity_metric, r)
+                         for r in rids])
+
+    def _disparity_pass(self, rm: RegionMetrics,
+                        rids: List[int]) -> DisparityReport:
+        vals = self._disparity_values(rm, rids)
+        return find_disparity_bottlenecks(self.tree, vals, rids)
+
+    # -- decision tables ---------------------------------------------------
+    def _dissimilarity_table(self, rm: RegionMetrics,
+                             rids: List[int]) -> DecisionTable:
+        """Fig. 4: per-process rows; attribute value = cluster id of the
+        process under that metric's per-region vectors; decision = cluster
+        id under the main (CPU time) metric."""
+        decision = optics_cluster(rm.vectors(self.similarity_metric, rids))
+        rows = []
+        per_attr_labels = []
+        for a in self.attributes:
+            labels = optics_cluster(rm.vectors(a, rids)).labels
+            per_attr_labels.append(labels)
+        m = rm.n_processes
+        for i in range(m):
+            rows.append(tuple(int(per_attr_labels[k][i])
+                              for k in range(len(self.attributes))))
+        return DecisionTable(
+            attributes=list(self.attributes),
+            rows=rows,
+            decisions=[int(x) for x in decision.labels],
+            object_ids=list(range(m)),
+        )
+
+    def _disparity_table(self, rm: RegionMetrics, rids: List[int],
+                         disp: DisparityReport) -> DecisionTable:
+        """Fig. 5: per-region rows; attribute = 1 iff the k-means severity
+        of the region's average metric value is higher than medium;
+        decision = 1 iff the region is a disparity bottleneck."""
+        rows_by_attr = []
+        for a in self.attributes:
+            avg = np.array([rm.region_mean(a, r) for r in rids])
+            sev = kmeans_severity(avg)
+            rows_by_attr.append([1 if s > MEDIUM else 0 for s in sev])
+        rows = [tuple(rows_by_attr[k][j] for k in range(len(self.attributes)))
+                for j in range(len(rids))]
+        decisions = [1 if r in set(disp.ccrs) else 0 for r in rids]
+        return DecisionTable(
+            attributes=list(self.attributes),
+            rows=rows,
+            decisions=decisions,
+            object_ids=list(rids),
+        )

@@ -1,0 +1,200 @@
+"""Clustering algorithms of AutoAnalyzer (paper §4.2).
+
+Two deliberately *simple* (lightweight) algorithms:
+
+* :func:`optics_cluster` — the simplified OPTICS method (paper Algorithm 1)
+  used to detect **dissimilarity** bottlenecks: process/shard performance
+  vectors are points in R^n; points within ``threshold`` distance of a seed
+  form a cluster when at least ``count_threshold`` are found; points joining
+  no cluster are isolated points (clusters of their own).
+
+* :func:`kmeans_severity` — k-means (k=5) over scalar per-region values used
+  to detect **disparity** bottlenecks, mapping regions to severity bands
+  very-low(0) .. very-high(4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+# Severity categories (paper §4.2.2).
+VERY_LOW, LOW, MEDIUM, HIGH, VERY_HIGH = 0, 1, 2, 3, 4
+SEVERITY_NAMES = ["very low", "low", "medium", "high", "very high"]
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    """Result of the simplified OPTICS pass."""
+
+    labels: np.ndarray          # cluster id per point, shape (m,)
+    n_clusters: int
+    threshold: float
+
+    def members(self, cid: int) -> List[int]:
+        return [int(i) for i in np.nonzero(self.labels == cid)[0]]
+
+    def sizes(self) -> List[int]:
+        return [int((self.labels == c).sum()) for c in range(self.n_clusters)]
+
+    def same_partition(self, other: "ClusterResult") -> bool:
+        """Paper §4.3: 'If the number of clusters or members of a cluster
+        change, we think the clustering result changes.'  Compared as
+        unlabelled partitions (cluster ids are arbitrary)."""
+        if self.n_clusters != other.n_clusters:
+            return False
+        mine = {frozenset(self.members(c)) for c in range(self.n_clusters)}
+        theirs = {frozenset(other.members(c)) for c in range(other.n_clusters)}
+        return mine == theirs
+
+
+def optics_cluster(
+    vectors: np.ndarray,
+    threshold: Optional[float] = None,
+    threshold_frac: float = 0.10,
+    count_threshold: int = 1,
+) -> ClusterResult:
+    """Simplified OPTICS clustering (paper Algorithm 1).
+
+    Parameters
+    ----------
+    vectors : (m, n) array — one performance vector per process/shard.
+    threshold : absolute distance threshold; if None, the paper's default
+        ``10% × length(V_p)`` (Euclidean norm of the seed vector) is used
+        per seed.
+    count_threshold : minimum number of neighbours (beyond the seed itself)
+        for the seed's neighbourhood to be confirmed as a cluster.  The
+        paper's isolated points become singleton clusters either way.
+    """
+    v = np.asarray(vectors, dtype=np.float64)
+    if v.ndim != 2:
+        raise ValueError("vectors must be (m, n)")
+    m = v.shape[0]
+    labels = np.full(m, -1, dtype=np.int64)
+    n_clusters = 0
+    used_threshold = -1.0
+    for p in range(m):
+        if labels[p] >= 0:
+            continue
+        thr = threshold if threshold is not None else threshold_frac * float(
+            np.linalg.norm(v[p]))
+        used_threshold = max(used_threshold, thr)
+        # Gather unassigned neighbours of the seed.
+        # `<=` (not the paper's strict `<`) so identical vectors cluster
+        # together even when the seed norm — and hence the threshold — is 0.
+        cand = [q for q in range(m)
+                if labels[q] < 0 and q != p
+                and float(np.linalg.norm(v[p] - v[q])) <= thr]
+        if len(cand) >= count_threshold:
+            labels[p] = n_clusters
+            for q in cand:
+                labels[q] = n_clusters
+            n_clusters += 1
+        else:
+            labels[p] = n_clusters  # isolated point => its own cluster
+            n_clusters += 1
+    return ClusterResult(labels=labels, n_clusters=n_clusters,
+                         threshold=used_threshold)
+
+
+def is_similar(vectors: np.ndarray, **kw) -> bool:
+    """All processes behave similarly <=> one cluster (paper §4.2.1)."""
+    return optics_cluster(vectors, **kw).n_clusters == 1
+
+
+def dissimilarity_severity(result: ClusterResult, vectors: np.ndarray) -> float:
+    """A scalar severity in [0, 1] summarising how dissimilar the processes
+    are (the paper prints e.g. 'dissimilarity severity, 5: 0.783958').
+    Defined as 1 - (size of largest cluster / m) blended with the relative
+    spread of cluster centroids."""
+    v = np.asarray(vectors, dtype=np.float64)
+    m = v.shape[0]
+    if result.n_clusters <= 1 or m <= 1:
+        return 0.0
+    largest = max(result.sizes())
+    frac = 1.0 - largest / m
+    centroids = np.stack([v[result.labels == c].mean(axis=0)
+                          for c in range(result.n_clusters)])
+    scale = float(np.linalg.norm(v.mean(axis=0))) or 1.0
+    spread = float(np.std(np.linalg.norm(centroids - v.mean(axis=0), axis=1)))
+    return min(1.0, frac + spread / (scale + 1e-30))
+
+
+def kmeans_1d(values: np.ndarray, k: int, n_iter: int = 100,
+              seed: int = 0) -> np.ndarray:
+    """Deterministic 1-D k-means (Hartigan/Wong-style Lloyd iterations with
+    quantile init).  Returns the label per value, labels ordered so that
+    label i has the i-th smallest centroid."""
+    x = np.asarray(values, dtype=np.float64).ravel()
+    n = x.size
+    if n == 0:
+        return np.zeros(0, dtype=np.int64)
+    uniq = np.unique(x)
+    if uniq.size <= k:
+        # Each distinct value its own (ordered) cluster.
+        mapping = {val: i for i, val in enumerate(np.sort(uniq))}
+        return np.array([mapping[val] for val in x], dtype=np.int64)
+    # Quantile init is deterministic and robust for 1-D data.
+    centroids = np.quantile(x, np.linspace(0, 1, k))
+    for _ in range(n_iter):
+        d = np.abs(x[:, None] - centroids[None, :])
+        lab = np.argmin(d, axis=1)
+        new = centroids.copy()
+        for c in range(k):
+            sel = x[lab == c]
+            if sel.size:
+                new[c] = sel.mean()
+        if np.allclose(new, centroids):
+            break
+        centroids = new
+    order = np.argsort(centroids)
+    rank = np.empty(k, dtype=np.int64)
+    rank[order] = np.arange(k)
+    return rank[lab]
+
+
+def kmeans_severity(values: Sequence[float], k: int = 5,
+                    log_space: bool = True) -> np.ndarray:
+    """Classify per-region scalar metrics into the five severity categories
+    (paper §4.2.2): very low(0), low(1), medium(2), high(3), very high(4).
+
+    Implementation notes vs the paper's raw k-means (recorded in DESIGN.md):
+    performance metrics span orders of magnitude and contain near-duplicate
+    noise, so (1) clustering runs in log space, (2) clusters whose centroids
+    differ by <3% of the data range are merged (noise robustness), and
+    (3) each cluster's severity label is its centroid's relative position in
+    the log range — so 'very high' always means 'close to the maximum', even
+    when fewer than 5 natural clusters exist."""
+    x = np.asarray(list(values), dtype=np.float64)
+    if x.size == 0:
+        return np.zeros(0, dtype=np.int64)
+    top = x.max()
+    if top <= 0:
+        return np.zeros(x.size, dtype=np.int64)
+    if log_space:
+        x = np.log10(np.maximum(x, top * 1e-4))
+    labels = kmeans_1d(x, min(k, x.size))
+    # centroid per cluster
+    cents = np.array([x[labels == c].mean() if (labels == c).any() else -np.inf
+                      for c in range(labels.max() + 1)])
+    order = [c for c in np.argsort(cents) if np.isfinite(cents[c])]
+    # merge adjacent near-duplicate clusters
+    rng = x.max() - x.min()
+    merged: List[List[int]] = []
+    for c in order:
+        if merged and rng > 0 and \
+                cents[c] - cents[merged[-1][-1]] < 0.03 * rng:
+            merged[-1].append(c)
+        else:
+            merged.append([c])
+    # severity by relative magnitude of the merged centroid
+    sev_of_cluster = {}
+    lo = x.min()
+    for group in merged:
+        gc = np.mean([cents[c] for c in group])
+        frac = (gc - lo) / rng if rng > 0 else 0.0
+        s = int(np.round((k - 1) * frac))
+        for c in group:
+            sev_of_cluster[c] = s
+    return np.array([sev_of_cluster[c] for c in labels], dtype=np.int64)

@@ -1,0 +1,184 @@
+"""Static HLO analysis: FLOPs/bytes from ``cost_analysis`` and collective
+traffic parsed from lowered/compiled HLO text.
+
+This is the dry-run measurement backend (DESIGN.md §2): on a CPU-only host
+the hardware-counter hierarchy of the paper is replaced by compiler-derived
+quantities.  Used both by the AutoAnalyzer static collector and by the
+roofline analysis (launch/roofline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, List, Optional, Tuple
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# e.g. ``bf16[4096,512]{1,0}`` or ``f32[]``
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array shapes occurring in ``shape_str``."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+# ``  %all-reduce.1 = bf16[1024]{0} all-reduce(...)`` — capture result
+# shape(s) (possibly a tuple) and the op name.
+_INSTR_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, int]
+    count_by_op: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+    def summary(self) -> str:
+        parts = [f"{op}: n={self.count_by_op[op]} bytes={self.bytes_by_op[op]:,}"
+                 for op in sorted(self.bytes_by_op)]
+        return "; ".join(parts) if parts else "none"
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape sizes of every collective in an HLO module.
+
+    ``-start`` ops are counted, matching ``-done`` ops are skipped so that
+    async pairs are not double counted.
+    """
+    bytes_by_op: Dict[str, int] = {}
+    count_by_op: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        b = shape_bytes(shape_str)
+        bytes_by_op[op] = bytes_by_op.get(op, 0) + b
+        count_by_op[op] = count_by_op.get(op, 0) + 1
+    return CollectiveStats(bytes_by_op, count_by_op)
+
+
+@dataclasses.dataclass
+class HardwareSpec:
+    """Per-chip capability (TPU v5e-class defaults per the assignment)."""
+
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12          # bf16 FLOP/s
+    hbm_bandwidth: float = 819e9        # bytes/s
+    ici_bandwidth: float = 50e9         # bytes/s per link
+    hbm_bytes: float = 16e9
+    vmem_bytes: float = 128 * 2**20     # ~128 MiB VMEM on v5e? use 128MiB
+
+
+TPU_V5E = HardwareSpec()
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """The three roofline terms (assignment §ROOFLINE), in seconds."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    chips: int
+    model_flops: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute_term / max(all terms): 1.0 = perfectly compute-bound."""
+        b = self.bound_s
+        return self.compute_s / b if b > 0 else 0.0
+
+
+def roofline_terms(
+    hlo_flops: float,
+    hlo_bytes: float,
+    collective_bytes: float,
+    chips: int,
+    hw: HardwareSpec = TPU_V5E,
+    model_flops: float = 0.0,
+    flops_already_per_chip: bool = True,
+) -> RooflineTerms:
+    """Compute the three-term roofline.
+
+    ``cost_analysis`` on an SPMD-partitioned module reports *per-program*
+    (i.e. per-chip) quantities, so by default flops/bytes are NOT divided by
+    ``chips`` again; collective bytes are per-chip link traffic as parsed
+    from the partitioned module.
+    """
+    div = 1.0 if flops_already_per_chip else float(chips)
+    return RooflineTerms(
+        compute_s=hlo_flops / div / hw.peak_flops,
+        memory_s=hlo_bytes / div / hw.hbm_bandwidth,
+        collective_s=collective_bytes / div / hw.ici_bandwidth,
+        hlo_flops=hlo_flops,
+        hlo_bytes=hlo_bytes,
+        collective_bytes=collective_bytes,
+        chips=chips,
+        model_flops=model_flops,
+    )
+
+
+def cost_analysis_of(compiled) -> Tuple[float, float]:
+    """Extract (flops, bytes_accessed) from a compiled executable."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    if byts == 0.0:
+        byts = sum(float(v) for k, v in ca.items()
+                   if k.startswith("bytes accessed"))
+    return flops, byts

@@ -1,0 +1,65 @@
+"""Human-readable analysis reports (paper Fig. 9 / Fig. 12 output style)."""
+from __future__ import annotations
+
+from typing import List
+
+from .analyzer import ATTRIBUTE_MEANING, AnalysisResult
+from .clustering import SEVERITY_NAMES
+from .regions import RegionTree
+from .search import severity_banding
+
+
+def render(tree: RegionTree, result: AnalysisResult) -> str:
+    lines: List[str] = []
+    dis = result.dissimilarity
+    lines.append("=== Performance similarity ===")
+    lines.append(f"there are {dis.baseline.n_clusters} clusters of "
+                 f"processes")
+    for c in range(dis.baseline.n_clusters):
+        members = " ".join(str(i) for i in dis.baseline.members(c))
+        lines.append(f"  cluster {c}: {members}")
+    if dis.exists:
+        lines.append(f"dissimilarity severity, {dis.baseline.n_clusters}: "
+                     f"{dis.severity:.6f}")
+        lines.append("CCR: " + ", ".join(
+            f"code region {r}" for r in dis.ccrs))
+        lines.append("CCCR: " + ", ".join(
+            f"code region {r}" for r in dis.cccrs))
+        if result.dissimilarity_causes:
+            cores = " or ".join(
+                "{" + ", ".join(sorted(c)) + "}"
+                for c in result.dissimilarity_causes)
+            lines.append(f"root-cause core attributes: {cores}")
+            meanings = sorted({ATTRIBUTE_MEANING.get(a, a)
+                               for c in result.dissimilarity_causes
+                               for a in c})
+            for m in meanings:
+                lines.append(f"  -> {m}")
+    else:
+        lines.append("no dissimilarity bottlenecks "
+                     "(all processes in one cluster)")
+
+    lines.append("")
+    lines.append("=== Code-region disparity (k-means severity) ===")
+    banding = severity_banding(result.disparity)
+    for name in SEVERITY_NAMES[::-1]:
+        rids = banding[name]
+        if rids:
+            lines.append(f"  {name}: code regions: "
+                         + ",".join(str(r) for r in rids))
+    if result.disparity.ccrs:
+        lines.append("CCR: " + ", ".join(
+            f"code region {r}" for r in result.disparity.ccrs))
+        lines.append("CCCR: " + ", ".join(
+            f"code region {r}" for r in result.disparity.cccrs))
+        if result.disparity_causes:
+            cores = " or ".join(
+                "{" + ", ".join(sorted(c)) + "}"
+                for c in result.disparity_causes)
+            lines.append(f"root-cause core attributes: {cores}")
+        for rid, causes in sorted(result.per_region_causes.items()):
+            if causes:
+                lines.append(f"  code region {rid}: " + "; ".join(causes))
+    else:
+        lines.append("no disparity bottlenecks")
+    return "\n".join(lines)

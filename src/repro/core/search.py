@@ -1,0 +1,182 @@
+"""Bottleneck searching algorithms (paper §4.3).
+
+* :func:`find_dissimilarity_bottlenecks` — Algorithm 2: top-down zeroing
+  search over the code-region tree against the simplified-OPTICS clustering.
+* :func:`find_disparity_bottlenecks` — k-means severity bands over CRNM,
+  then the leaf-or-dominant refinement to CCCRs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .clustering import (HIGH, SEVERITY_NAMES, ClusterResult, kmeans_severity,
+                         optics_cluster)
+from .regions import CodeRegion, RegionTree
+
+
+@dataclasses.dataclass
+class DissimilarityReport:
+    exists: bool
+    baseline: ClusterResult
+    ccrs: List[int]
+    cccrs: List[int]
+    severity: float
+    composite_s: int = 1  # >1 when composite regions were needed
+
+
+@dataclasses.dataclass
+class DisparityReport:
+    severities: Dict[int, int]          # region_id -> 0..4
+    ccrs: List[int]
+    cccrs: List[int]
+    values: Dict[int, float]            # region_id -> metric value (CRNM)
+
+
+ClusterFn = Callable[[np.ndarray], ClusterResult]
+
+
+def _default_cluster(vectors: np.ndarray) -> ClusterResult:
+    return optics_cluster(vectors)
+
+
+def find_dissimilarity_bottlenecks(
+    tree: RegionTree,
+    T: np.ndarray,
+    region_ids: Sequence[int],
+    cluster_fn: ClusterFn = _default_cluster,
+    max_composite: Optional[int] = None,
+) -> DissimilarityReport:
+    """Algorithm 2 of the paper.
+
+    ``T`` is the (m, n) per-process measurement matrix (CPU clock time by
+    default), columns ordered as ``region_ids``.  Management regions must
+    already be excluded by the caller.
+    """
+    T = np.asarray(T, dtype=np.float64)
+    col = {rid: j for j, rid in enumerate(region_ids)}
+    regions = {r.region_id: r for r in tree.regions()
+               if r.region_id in col}
+
+    def depth1(rids=None) -> List[CodeRegion]:
+        return [r for r in regions.values() if r.depth == 1]
+
+    # Lines 3-9: zero depth>1 columns, baseline clustering.
+    work = T.copy()
+    for rid, r in regions.items():
+        if r.depth > 1:
+            work[:, col[rid]] = 0.0
+    baseline = cluster_fn(work)
+    from .clustering import dissimilarity_severity
+    severity = dissimilarity_severity(baseline, work)
+    if baseline.n_clusters == 1:
+        return DissimilarityReport(False, baseline, [], [], 0.0)
+
+    ccrs: List[int] = []
+    cccrs: List[int] = []
+
+    def analyze_children(parent: CodeRegion) -> bool:
+        """Restore each child alone; if the clustering equals the baseline
+        (the dissimilarity is reproduced), the child is a CCR.  Returns True
+        if any child is a CCR."""
+        any_child = False
+        for child in parent.children:
+            if child.region_id not in col:
+                continue
+            k = col[child.region_id]
+            saved = work[:, k].copy()
+            work[:, k] = T[:, k]
+            res = cluster_fn(work)
+            if res.same_partition(baseline):
+                ccrs.append(child.region_id)
+                any_child = True
+                deeper = analyze_children(child)
+                if child.is_leaf or not deeper:
+                    cccrs.append(child.region_id)
+            work[:, k] = saved
+        return any_child
+
+    # Lines 10-30: zero each depth-1 region; a change in the clustering
+    # result marks it as a CCR.
+    for r in depth1():
+        j = col[r.region_id]
+        saved = work[:, j].copy()
+        work[:, j] = 0.0
+        res = cluster_fn(work)
+        if not res.same_partition(baseline):
+            ccrs.append(r.region_id)
+            had_child_ccr = analyze_children(r)
+            if r.is_leaf or not had_child_ccr:
+                cccrs.append(r.region_id)
+        work[:, j] = saved
+
+    s = 1
+    if not ccrs:
+        # Lines 31-37: combine s adjacent 1-code regions into composite
+        # regions and repeat.
+        d1 = depth1()
+        rmax = max_composite if max_composite is not None else len(d1) - 1
+        s = 2
+        while not ccrs and s <= max(rmax, 2) and s <= len(d1):
+            for start in range(0, len(d1) - s + 1):
+                group = d1[start:start + s]
+                cols = [col[g.region_id] for g in group]
+                saved = work[:, cols].copy()
+                work[:, cols] = 0.0
+                res = cluster_fn(work)
+                if not res.same_partition(baseline):
+                    ccrs.extend(g.region_id for g in group)
+                    cccrs.extend(g.region_id for g in group)
+                work[:, cols] = saved
+            s += 1
+        s -= 1
+
+    return DissimilarityReport(True, baseline, sorted(set(ccrs)),
+                               sorted(set(cccrs)), severity, s)
+
+
+def find_disparity_bottlenecks(
+    tree: RegionTree,
+    values: np.ndarray,
+    region_ids: Sequence[int],
+    k: int = 5,
+) -> DisparityReport:
+    """Disparity search (paper §4.2.2 + §4.3).
+
+    ``values`` are per-region scalars (average CRNM over processes).
+    Severity >= HIGH marks a CCR; a CCR is a CCCR when it is a leaf or its
+    severity exceeds that of every child CCR (the paper's ST case: equal
+    child severity promotes the child, not the parent).
+    """
+    values = np.asarray(values, dtype=np.float64)
+    sev = kmeans_severity(values, k=k)
+    sev_by_id = {rid: int(s) for rid, s in zip(region_ids, sev)}
+    val_by_id = {rid: float(v) for rid, v in zip(region_ids, values)}
+    regions = {r.region_id: r for r in tree.regions()
+               if r.region_id in sev_by_id}
+    ccrs = [rid for rid, s in sev_by_id.items() if s >= HIGH]
+    ccr_set = set(ccrs)
+    cccrs: List[int] = []
+    for rid in ccrs:
+        r = regions[rid]
+        child_ccrs = [c for c in r.children if c.region_id in ccr_set]
+        if r.is_leaf or not child_ccrs:
+            cccrs.append(rid)
+        else:
+            # Non-leaf CCR is a CCCR only if its severity strictly exceeds
+            # every child's.
+            if all(sev_by_id[rid] > sev_by_id[c.region_id]
+                   for c in child_ccrs):
+                cccrs.append(rid)
+    return DisparityReport(sev_by_id, sorted(ccrs), sorted(cccrs), val_by_id)
+
+
+def severity_banding(report: DisparityReport) -> Dict[str, List[int]]:
+    """Render the paper Fig. 12 style banding."""
+    out: Dict[str, List[int]] = {name: [] for name in SEVERITY_NAMES[::-1]}
+    for rid, s in sorted(report.severities.items(),
+                         key=lambda kv: -report.values[kv[0]]):
+        out[SEVERITY_NAMES[s]].append(rid)
+    return out

@@ -1,0 +1,5 @@
+from .pipeline import (DataConfig, batch_for_model, batch_iterator,
+                       device_batch, host_batch)
+
+__all__ = ["DataConfig", "batch_for_model", "batch_iterator", "device_batch",
+           "host_batch"]

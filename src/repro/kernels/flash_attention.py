@@ -1,0 +1,117 @@
+"""Flash attention Pallas TPU kernel.
+
+TPU adaptation (DESIGN.md §2): blocks are sized for VMEM (q_block × dh and
+k_block × dh tiles, MXU-aligned: dh and blocks multiples of 128 where the
+head dim allows), the kv loop is the innermost *sequential* grid dimension
+so the online-softmax accumulators live in VMEM scratch across grid steps.
+Causal + sliding-window masking prunes fully-masked kv blocks via
+``pl.when`` (no wasted MXU work past the diagonal / outside the window).
+
+Layout: q (B, H, Q, dh); k/v (B, H, K, dh).  GQA is folded by the caller
+(ops.fold_gqa).  Validated in interpret mode against ref.flash_attention_ref.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            causal: bool, window: Optional[int], q_block: int, k_block: int,
+            k_len: int, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * q_block
+    k_start = ki * k_block
+    # live unless the whole kv block is masked out
+    diag_off = k_len - pl.num_programs(2) * q_block  # K - Q
+    live = True
+    if causal:
+        live = k_start <= q_start + q_block - 1 + diag_off
+    if window is not None:
+        live = jnp.logical_and(
+            live, k_start + k_block - 1 > q_start + diag_off - window)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)      # (q_block, dh)
+        k = k_ref[0, 0].astype(jnp.float32)      # (k_block, dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qp = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kp = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones(s.shape, jnp.bool_)
+        if causal:
+            mask &= kp <= qp + diag_off
+        if window is not None:
+            mask &= kp > qp + diag_off - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    q_block: int = 256, k_block: int = 256,
+                    interpret: bool = False):
+    """q (B,H,Q,dh), k/v (B,H,K,dh) -> (B,H,Q,dh)."""
+    B, H, Q, dh = q.shape
+    K = k.shape[2]
+    q_block = min(q_block, Q)
+    k_block = min(k_block, K)
+    if Q % q_block or K % k_block:
+        raise ValueError("seq lens must divide block sizes")
+    nq, nk = Q // q_block, K // k_block
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(
+        _kernel, causal=causal, window=window, q_block=q_block,
+        k_block=k_block, k_len=K, scale=1.0 / np.sqrt(dh))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q_block, dh), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, k_block, dh), lambda b, h, qi, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, k_block, dh), lambda b, h, qi, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_block, dh),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Q, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block,), jnp.float32),      # m (running max)
+            pltpu.VMEM((q_block,), jnp.float32),      # l (running sum)
+            pltpu.VMEM((q_block, dh), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

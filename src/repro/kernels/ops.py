@@ -1,0 +1,66 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+On the TPU target the kernels run compiled; on this CPU container they run
+in interpret mode (``interpret=True``), which executes the same kernel body
+— correctness is identical, performance is not (the dry-run's roofline
+reads the jnp twin paths instead).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as fa
+from . import ref
+from . import rmsnorm as rn
+from . import rwkv6_scan as wk
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fold_gqa(q, k, v):
+    """(B,S,H,dh)/(B,S,KV,dh) model layout -> (B*g? no: (B,H,S,dh)) MHA
+    layout with k/v repeated over groups."""
+    B, S, H, dh = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qh = jnp.moveaxis(q, 1, 2)                       # (B,H,S,dh)
+    kh = jnp.repeat(jnp.moveaxis(k, 1, 2), g, axis=1)
+    vh = jnp.repeat(jnp.moveaxis(v, 1, 2), g, axis=1)
+    return qh, kh, vh
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_block",
+                                             "k_block", "force_kernel"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, q_block: int = 256,
+                    k_block: int = 256, force_kernel: bool = False):
+    """Model layout q (B,S,H,dh), k/v (B,S,KV,dh) -> (B,S,H,dh)."""
+    qh, kh, vh = fold_gqa(q, k, v)
+    interpret = not _on_tpu()
+    out = fa.flash_attention(qh, kh, vh, causal=causal, window=window,
+                             q_block=q_block, k_block=k_block,
+                             interpret=interpret)
+    return jnp.moveaxis(out, 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv6(r, k, v, w, u, *, chunk: int = 32):
+    return wk.wkv6(r, k, v, w, u, chunk=chunk, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "row_block"))
+def rmsnorm(x, w, *, eps: float = 1e-6, row_block: int = 256):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    rb = row_block
+    while x2.shape[0] % rb:
+        rb //= 2
+    out = rn.rmsnorm(x2, w, eps=eps, row_block=max(rb, 1),
+                     interpret=not _on_tpu())
+    return out.reshape(shape)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None):
+    """q (B,H,Q,dh), k/v (B,H,K,dh) — MHA layout (GQA folded by caller)."""
+    B, H, Q, dh = q.shape
+    K = k.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(dh)
+    qp = jnp.arange(Q)[:, None]
+    kp = jnp.arange(K)[None, :]
+    mask = jnp.ones((Q, K), bool)
+    if causal:
+        mask &= kp <= qp + (K - Q)       # queries are the last Q positions
+    if window is not None:
+        mask &= kp > qp + (K - Q) - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, w, u):
+    """RWKV-6 WKV oracle.  r,k,v,w: (B,H,T,dh); u: (H,dh).
+    out_t = r_t·(S + (u⊙k_t)v_tᵀ);  S ← diag(w_t)S + k_t v_tᵀ."""
+    B, H, T, dh = r.shape
+    S0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp  # (B,H,dh)
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 2, 0)
+               for t in (r, k, v, w))
+    S, outs = lax.scan(step, S0, xs)
+    return jnp.moveaxis(outs, 0, 2).astype(r.dtype), S

@@ -1,0 +1,87 @@
+"""Chunked WKV-6 Pallas TPU kernel.
+
+TPU adaptation of RWKV-6 (DESIGN.md §2): instead of a per-token sequential
+scan (HBM-bound, VPU-only), the sequence is processed in chunks of C tokens.
+Within a chunk the recurrence unrolls into MXU matmuls via the standard
+chunked-linear-attention identity with per-channel cumulative decays:
+
+    cum_t   = Σ_{j≤t} log w_j
+    q~_t    = r_t ⊙ exp(cum_t − log w_t)        (decay up to t−1)
+    k~_s    = k_s ⊙ exp(−cum_s)
+    score_{t,s} = q~_t·k~_s  (s<t);   r_t·(u⊙k_t)  (s=t);   0 (s>t)
+    out     = score @ v + q~ @ S_in
+    S_out   = exp(cum_C) ⊙ S_in + (exp(cum_C − cum) ⊙ k)ᵀ @ v
+
+The chunk axis is the innermost (sequential) grid dim; the inter-chunk
+state S lives in VMEM scratch.  exp(−cum) grows within a chunk, so C is
+kept small (default 32) and math is f32 — matching production chunked
+implementations.  Validated against ref.wkv6_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_scr, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0, 0].astype(jnp.float32)      # (C, dh)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)         # (dh,)
+    S = s_scr[...]                            # (dh_k, dh_v)
+
+    logw = jnp.log(jnp.maximum(w, 1e-30))
+    cum = jnp.cumsum(logw, axis=0)           # (C, dh)
+    q_t = r * jnp.exp(cum - logw)            # decay up to t-1
+    k_t = k * jnp.exp(-cum)
+
+    scores = jax.lax.dot_general(q_t, k_t, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(s_idx < t_idx, scores, 0.0)
+    diag = jnp.sum(r * (u[None, :] * k), axis=1)          # (C,)
+    intra = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    intra = intra + diag[:, None] * v
+    inter = jax.lax.dot_general(q_t, S, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    o_ref[0, 0] = (intra + inter).astype(o_ref.dtype)
+
+    decay_all = jnp.exp(cum[-1])                           # (dh,)
+    k_rem = k * jnp.exp(cum[-1][None, :] - cum)            # (C, dh)
+    s_scr[...] = decay_all[:, None] * S + jax.lax.dot_general(
+        k_rem, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def wkv6(r, k, v, w, u, *, chunk: int = 32, interpret: bool = False):
+    """r,k,v,w: (B,H,T,dh); u: (H,dh) -> out (B,H,T,dh)."""
+    B, H, T, dh = r.shape
+    chunk = min(chunk, T)
+    if T % chunk:
+        raise ValueError("T must divide chunk")
+    nc = T // chunk
+    grid = (B, H, nc)
+    spec = pl.BlockSpec((1, 1, chunk, dh), lambda b, h, c: (b, h, c, 0))
+    u_spec = pl.BlockSpec((1, dh), lambda b, h, c: (h, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[spec, spec, spec, spec, u_spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, T, dh), r.dtype),
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

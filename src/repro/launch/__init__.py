@@ -1,0 +1,6 @@
+"""Launchers: mesh construction, multi-pod dry-run, train/serve drivers,
+roofline extraction.  NOTE: importing repro.launch.dryrun sets XLA_FLAGS
+(512 placeholder devices) — never import it from tests or benchmarks."""
+from .mesh import make_mesh, make_production_mesh
+
+__all__ = ["make_mesh", "make_production_mesh"]

@@ -1,0 +1,257 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run (assignment §MULTI-POD DRY-RUN).
+
+For every (architecture × input shape × mesh) cell:
+  * PRODUCTION pass — the scanned, remat'd step lowered with full shardings,
+    ``.lower().compile()`` must succeed; ``memory_analysis()`` proves fit;
+  * COST probes — the same step at depth L=1 and L=2 with every scan
+    unrolled.  HLO cost_analysis counts scan (while-loop) bodies ONCE
+    regardless of trip count, so per-module costs are recovered exactly by
+    the linear decomposition  cost(L) = fixed + L·body  fitted from the two
+    probes, then extrapolated to the real depth.  FLOPs, bytes and
+    collective bytes all extrapolate this way (they are additive in L).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x22b \
+      --shape train_4k [--multi-pod] [--probes] [--out out.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--out dir/]
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_arch, list_archs, shapes_for
+from repro.core.hlo import parse_collectives
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (abstract_model_state, batch_shardings,
+                                decode_input_specs, decode_state_specs,
+                                model_shardings, non_embed_param_count,
+                                param_count, state_shardings,
+                                train_batch_specs)
+from repro.models import build
+from repro.optim import AdamWConfig
+from repro.sharding import activation_sharding, rules_for
+from repro.train.loop import make_train_step
+
+
+def _lower_cell(cfg, shape, mesh, *, seq_sharded=False, sp=False):
+    """Lower + compile one cell.  Returns (lowered, compiled, timings)."""
+    api = build(cfg)
+    params, axes, opt_shapes, opt_axes = abstract_model_state(cfg)
+    p_sh, o_sh = model_shardings(cfg, params, axes, opt_shapes, opt_axes,
+                                 mesh, decode=(shape.kind == "decode"))
+    act_rules = rules_for(cfg, param=False, seq_sharded=seq_sharded,
+                          sp=sp)
+    t0 = time.perf_counter()
+    with mesh, activation_sharding(mesh, act_rules):
+        if shape.kind == "train":
+            step = make_train_step(cfg, AdamWConfig())
+            b_specs = train_batch_specs(cfg, shape)
+            b_sh = batch_shardings(b_specs, mesh)
+            jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                             out_shardings=(p_sh, o_sh, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params, opt_shapes, b_specs)
+        elif shape.kind == "prefill":
+            def prefill(p, batch):
+                logits, _ = api.forward(p, batch["tokens"],
+                                        embeds=batch.get("embeds"),
+                                        last_only=True)
+                return logits
+            b_specs = train_batch_specs(cfg, shape)
+            b_specs.pop("labels")
+            b_sh = batch_shardings(b_specs, mesh)
+            jitted = jax.jit(prefill, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(params, b_specs)
+        else:  # decode
+            st_specs = decode_state_specs(cfg, shape)
+            st_sh = state_shardings(st_specs, mesh, shape.global_batch,
+                                    n_kv_heads=cfg.n_kv_heads)
+            in_specs = decode_input_specs(cfg, shape)
+            tok_sh = batch_shardings(
+                {"tokens": in_specs["tokens"]}, mesh)["tokens"]
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            pos_sh = NamedSharding(mesh, P())
+            step = lambda p, s, t, pos: api.decode_step(p, s, t, pos)
+            jitted = jax.jit(step, in_shardings=(p_sh, st_sh, tok_sh, pos_sh),
+                             out_shardings=(None, st_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params, st_specs, in_specs["tokens"],
+                                   in_specs["pos"])
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t2 = time.perf_counter()
+    return lowered, compiled, (t1 - t0, t2 - t1)
+
+
+def _probe_cfg(cfg, depth_units: int):
+    """A depth-reduced, fully-unrolled clone for the cost probes."""
+    kw = dict(probe_unroll=True,
+              attn_q_block=2048, attn_k_block=8192)
+    if cfg.family == "hybrid":
+        kw["n_layers"] = depth_units * len(cfg.recurrent.block_pattern)
+    elif cfg.family == "encdec":
+        kw["n_layers"] = depth_units
+        kw["n_encoder_layers"] = depth_units
+    else:
+        kw["n_layers"] = depth_units
+    return cfg.with_(**kw)
+
+
+def _cost_of(compiled) -> Dict[str, float]:
+    from repro.core.hlo import cost_analysis_of
+    flops, byts = cost_analysis_of(compiled)
+    coll = parse_collectives(compiled.as_text())
+    return {"flops": flops, "bytes": byts,
+            "collective_bytes": float(coll.total_bytes),
+            "coll_by_op": dict(coll.bytes_by_op),
+            "coll_counts": dict(coll.count_by_op)}
+
+
+def _extrapolate(c1: Dict, c2: Dict, depth: float) -> Dict[str, float]:
+    """cost(L) = fixed + L·body, fitted at L=1,2, evaluated at ``depth``."""
+    out = {}
+    for k in ("flops", "bytes", "collective_bytes"):
+        body = c2[k] - c1[k]
+        fixed = c1[k] - body
+        # partitioner choices can differ slightly between the two probe
+        # depths; clamp so a small negative body never extrapolates below
+        # the larger measured probe
+        out[k] = max(fixed + depth * body, c1[k], c2[k], 0.0)
+    ops = set(c1["coll_by_op"]) | set(c2["coll_by_op"])
+    out["coll_by_op"] = {}
+    out["coll_counts"] = {}
+    for op in ops:
+        b1, b2 = c1["coll_by_op"].get(op, 0), c2["coll_by_op"].get(op, 0)
+        n1, n2 = c1["coll_counts"].get(op, 0), c2["coll_counts"].get(op, 0)
+        out["coll_by_op"][op] = max(0.0, (b1 - (b2 - b1)) + depth * (b2 - b1))
+        out["coll_counts"][op] = max(0.0, (n1 - (n2 - n1)) + depth * (n2 - n1))
+    return out
+
+
+def _depth_units(cfg) -> float:
+    from repro.models.transformer import hybrid_pattern
+    if cfg.family == "hybrid":
+        n_blocks, tail = hybrid_pattern(cfg)
+        return n_blocks + len(tail) / len(cfg.recurrent.block_pattern)
+    return float(cfg.n_layers)
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+             probes: bool = True, cfg_override=None,
+             hw=None, mesh=None, sp: bool = True) -> Dict[str, Any]:
+    from repro.core.hlo import TPU_V5E
+    hw = hw or TPU_V5E
+    entry = get_arch(arch_id)
+    cfg = cfg_override or entry.full
+    shape = SHAPES[shape_name]
+    seq_sharded = (shape.name == "long_500k")
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    params, _, _, _ = abstract_model_state(cfg)
+    n_total = param_count(params)
+    n_active = n_total
+    if cfg.moe is not None:
+        mo = cfg.moe
+        n_active -= int(cfg.n_layers * (mo.n_experts - mo.top_k)
+                        * 3 * cfg.d_model * mo.d_ff)
+    model_flops = rl.model_flops_for(cfg, shape, n_total, n_active)
+
+    # SP pays off only when there ARE saved activations to shrink (train
+    # backward); forward-only prefill just eats the reshard cost (§Perf,
+    # refuted-hypothesis entry).
+    use_sp = sp and shape.kind == "train"
+    lowered, compiled, (lower_s, compile_s) = _lower_cell(
+        cfg, shape, mesh, seq_sharded=seq_sharded, sp=use_sp)
+    result: Dict[str, Any] = {
+        "arch": arch_id, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "chips": int(np.prod(mesh.devices.shape)),
+        "lower_s": lower_s, "compile_s": compile_s,
+        "memory": rl.memory_analysis_dict(compiled),
+        "production_cost_raw": _cost_of(compiled),
+        "model_flops": model_flops,
+        "params_b": n_total / 1e9,
+        "active_params_b": n_active / 1e9,
+    }
+    if probes:
+        depth = _depth_units(cfg)
+        costs = []
+        for d in (1, 2):
+            pcfg = _probe_cfg(cfg, d)
+            _, pc, _ = _lower_cell(pcfg, shape, mesh,
+                                   seq_sharded=seq_sharded, sp=use_sp)
+            costs.append(_cost_of(pc))
+        ext = _extrapolate(costs[0], costs[1], depth)
+        result["cost"] = ext
+        from repro.core.hlo import roofline_terms
+        chips = result["chips"]
+        terms = roofline_terms(ext["flops"], ext["bytes"],
+                               ext["collective_bytes"], chips, hw,
+                               model_flops=model_flops / chips)
+        result["roofline"] = {
+            "compute_s": terms.compute_s, "memory_s": terms.memory_s,
+            "collective_s": terms.collective_s,
+            "dominant": terms.dominant,
+            "useful_ratio": terms.useful_flops_ratio,
+            "roofline_fraction": terms.roofline_fraction,
+            "bound_s": terms.bound_s,
+        }
+    return result
+
+
+def iter_cells():
+    for arch_id in list_archs():
+        if arch_id == "st-100m":
+            continue
+        cfg = get_arch(arch_id).full
+        for shape in shapes_for(cfg):
+            yield arch_id, shape.name
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    cells = list(iter_cells()) if args.all else [(args.arch, args.shape)]
+    results = []
+    for arch_id, shape_name in cells:
+        t0 = time.perf_counter()
+        try:
+            r = run_cell(arch_id, shape_name, multi_pod=args.multi_pod,
+                         probes=not args.no_probes)
+            r["ok"] = True
+        except Exception as e:  # a dry-run failure is a bug to surface
+            r = {"arch": arch_id, "shape": shape_name, "ok": False,
+                 "error": f"{type(e).__name__}: {e}"}
+        r["wall_s"] = time.perf_counter() - t0
+        results.append(r)
+        print(json.dumps(r)[:2000], flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    bad = [r for r in results if not r.get("ok")]
+    print(f"\n{len(results) - len(bad)}/{len(results)} cells OK",
+          file=sys.stderr)
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

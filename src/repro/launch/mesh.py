@@ -1,0 +1,34 @@
+"""Production meshes (assignment §MULTI-POD DRY-RUN).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state.  Single pod: (data=16, model=16) = 256 chips.  Multi-pod adds an
+outer pure-DP 'pod' axis: (pod=2, data=16, model=16) = 512 chips.
+
+In a 512-placeholder-device dry-run process the single-pod mesh uses the
+first 256 devices (explicit ``devices=`` so both meshes coexist).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — launch "
+            f"with XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary small meshes for tests (e.g. (2, 4) on 8 host devices)."""
+    n = int(np.prod(shape))
+    dev = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)

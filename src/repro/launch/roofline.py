@@ -1,0 +1,125 @@
+"""Roofline-term extraction from a lowered/compiled dry-run cell
+(assignment §ROOFLINE).
+
+    compute term    = HLO_FLOPs / peak_FLOP/s        (per chip)
+    memory term     = HLO_bytes / HBM_bw             (per chip)
+    collective term = collective_bytes / link_bw     (per chip)
+
+cost_analysis() on the SPMD-partitioned module reports per-program (=per
+chip) quantities; collective bytes are parsed from the partitioned HLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+import jax
+
+from repro.core.hlo import (TPU_V5E, CollectiveStats, HardwareSpec,
+                            RooflineTerms, cost_analysis_of,
+                            parse_collectives, roofline_terms)
+
+
+def memory_analysis_dict(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    return out
+
+
+@dataclasses.dataclass
+class CellReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float
+    bytes_accessed: float
+    collective_bytes: float
+    collectives: Dict[str, int]
+    collective_counts: Dict[str, int]
+    terms: Dict[str, float]
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    roofline_fraction: float
+    memory: Dict[str, float]
+    lower_s: float
+    compile_s: float
+    notes: str = ""
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def analyze_cell(arch: str, shape_name: str, mesh, lowered, compiled,
+                 model_flops: float, hw: HardwareSpec = TPU_V5E,
+                 notes: str = "", lower_s: float = 0.0,
+                 compile_s: float = 0.0) -> CellReport:
+    chips = int(np.prod(mesh.devices.shape))
+    flops, byts = cost_analysis_of(compiled)
+    text = compiled.as_text()
+    cstats = parse_collectives(text)
+    terms = roofline_terms(flops, byts, cstats.total_bytes, chips, hw,
+                           model_flops=model_flops / chips)
+    return CellReport(
+        arch=arch,
+        shape=shape_name,
+        mesh="x".join(str(s) for s in mesh.devices.shape),
+        chips=chips,
+        flops=flops,
+        bytes_accessed=byts,
+        collective_bytes=float(cstats.total_bytes),
+        collectives={k: int(v) for k, v in cstats.bytes_by_op.items()},
+        collective_counts={k: int(v) for k, v in cstats.count_by_op.items()},
+        terms={"compute_s": terms.compute_s, "memory_s": terms.memory_s,
+               "collective_s": terms.collective_s},
+        dominant=terms.dominant,
+        model_flops=model_flops,
+        useful_ratio=terms.useful_flops_ratio,
+        roofline_fraction=terms.roofline_fraction,
+        memory=memory_analysis_dict(compiled),
+        lower_s=lower_s,
+        compile_s=compile_s,
+        notes=notes,
+    )
+
+
+def model_flops_for(cfg, shape, n_params: int, n_active: int) -> float:
+    """MODEL_FLOPS per assignment: 6·N·D (train) with D = tokens; decode
+    steps process one token per sequence (2·N_active·B forward-only)."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one new token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def format_table(reports) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':10s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+           f"{'bound':>10s} {'useful':>7s} {'roofl%':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in reports:
+        t = r.terms
+        lines.append(
+            f"{r.arch:24s} {r.shape:12s} {r.mesh:10s} "
+            f"{t['compute_s']:10.3e} {t['memory_s']:10.3e} "
+            f"{t['collective_s']:10.3e} {r.dominant:>10s} "
+            f"{r.useful_ratio:7.3f} {100*r.roofline_fraction:6.1f}%")
+    return "\n".join(lines)

@@ -1,0 +1,129 @@
+"""Abstract input specs for the dry-run: ShapeDtypeStruct stand-ins for
+every model input (weak-type-correct, shardable, no device allocation).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import build
+from repro.models.layers import abstract_init
+from repro.optim import init_opt_state
+from repro.sharding import rules_for, sharding_for, tree_shardings
+
+
+def abstract_model_state(cfg: ModelConfig) -> Tuple[Any, Any, Any, Any]:
+    """(param_shapes, param_axes, opt_shapes, opt_axes) — no allocation."""
+    api = build(cfg)
+    with abstract_init():
+        params, axes = api.init(jax.random.key(0))
+    opt_shapes = jax.eval_shape(init_opt_state, params)
+    opt_axes = {"m": axes, "v": axes, "step": None}
+    return params, axes, opt_shapes, opt_axes
+
+
+def param_count(param_shapes) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(param_shapes))
+
+
+def non_embed_param_count(param_shapes) -> int:
+    total = param_count(param_shapes)
+    emb = int(np.prod(param_shapes["embed"]["tokens"].shape))
+    head = param_shapes.get("head")
+    if head is not None:
+        emb += int(np.prod(head.shape))
+    return total - emb
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.family in ("vlm", "encdec", "audio") and cfg.frontend:
+        P_ = cfg.frontend_tokens
+        specs["embeds"] = jax.ShapeDtypeStruct(
+            (B, P_, cfg.d_model), cfg.activation_dtype())
+        if cfg.family == "vlm":
+            S_text = max(S - P_, 2)
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S_text), jnp.int32)
+            specs["labels"] = jax.ShapeDtypeStruct((B, S_text), jnp.int32)
+    return specs
+
+
+def decode_state_specs(cfg: ModelConfig, shape: InputShape) -> Any:
+    api = build(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    kw = {}
+    if cfg.family == "encdec":
+        kw["enc_len"] = cfg.frontend_tokens
+    return jax.eval_shape(lambda: api.init_decode_state(B, S, **kw))
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B = shape.global_batch
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+# -- shardings ---------------------------------------------------------------
+def batch_shardings(specs: Dict[str, Any], mesh) -> Dict[str, Any]:
+    from repro.sharding.rules import ACT_RULES, sharding_for as sf
+
+    def one(s):
+        if s.ndim >= 1:
+            axes = ("batch",) + (None,) * (s.ndim - 1)
+        else:
+            axes = ()
+        return sf(s.shape, axes, ACT_RULES, mesh)
+
+    return jax.tree.map(one, specs)
+
+
+def state_shardings(state_specs, mesh, global_batch: int,
+                    n_kv_heads: int = 0):
+    """Decode caches: shard the batch dim — identified as the first dim of
+    size ``global_batch`` after the stacked layer dim — over (pod, data),
+    and the KV-head dim (size == n_kv_heads, after the batch dim) over the
+    model axis when divisible (an MHA cache at 32k x 128 batch does not fit
+    the data axis alone); everything else replicated."""
+    from repro.sharding.rules import ACT_RULES, sharding_for as sf
+
+    def one(s):
+        axes = [None] * s.ndim
+        b_at = None
+        if global_batch > 1:
+            for i in range(1, s.ndim):
+                if s.shape[i] == global_batch:
+                    axes[i] = "batch"
+                    b_at = i
+                    break
+        if n_kv_heads > 1 and b_at is not None:
+            for i in range(b_at + 2, s.ndim):   # skip the seq dim
+                if s.shape[i] == n_kv_heads:
+                    axes[i] = "act_kv"
+                    break
+        return sf(s.shape, tuple(axes), ACT_RULES, mesh)
+
+    return jax.tree.map(one, state_specs)
+
+
+def model_shardings(cfg: ModelConfig, param_shapes, param_axes, opt_shapes,
+                    opt_axes, mesh, decode: bool = False):
+    rules = rules_for(cfg, param=True, decode=decode)
+    p_sh = tree_shardings(param_shapes, param_axes, rules, mesh)
+    o_sh = {
+        "m": tree_shardings(opt_shapes["m"], opt_axes["m"], rules, mesh),
+        "v": tree_shardings(opt_shapes["v"], opt_axes["v"], rules, mesh),
+        "step": NamedSharding(mesh, P()),
+    }
+    return p_sh, o_sh

@@ -1,0 +1,169 @@
+"""AutoAnalyzer over a dry-run cell: the paper's disparity analysis applied
+to the *phases* of a training step (DESIGN.md §4).
+
+Each code region (embed / attention sublayer / mlp-or-moe sublayer /
+head+loss / optimizer) is lowered standalone under the production mesh and
+shardings; its static costs (FLOPs, bytes, collective bytes) become the
+region's metrics, with estimated time = max(three roofline terms) standing
+in for wall/CPU clock (this container is CPU-only).  The k-means severity
+bands + rough-set root causes then point at what to optimize — the §Perf
+loop's triage step, powered by the paper's own machinery.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core import (BYTES, COMM_BYTES, COMM_TIME, CPU_TIME, FLOPS,
+                        HBM_INTENSITY, WALL_TIME, AnalysisResult,
+                        AutoAnalyzer, RegionMetrics, RegionTree, render)
+from repro.core.hlo import (TPU_V5E, HardwareSpec, cost_analysis_of,
+                            parse_collectives, roofline_terms)
+from repro.models import build, transformer
+from repro.models.layers import abstract_init
+from repro.sharding import activation_sharding, rules_for, tree_shardings
+
+# backward pass ≈ 2x forward FLOPs; +1x recompute under nothing_saveable
+TRAIN_MULTIPLIER = 4.0
+
+
+def _region_cost(fn, args, shardings, mesh, act_rules) -> Dict[str, float]:
+    with mesh, activation_sharding(mesh, act_rules):
+        jitted = jax.jit(fn, in_shardings=shardings)
+        compiled = jitted.lower(*args).compile()
+    flops, byts = cost_analysis_of(compiled)
+    coll = parse_collectives(compiled.as_text()).total_bytes
+    return {"flops": flops, "bytes": byts, "coll": float(coll)}
+
+
+def analyze_train_cell(cfg: ModelConfig, shape: InputShape, mesh,
+                       hw: HardwareSpec = TPU_V5E
+                       ) -> Tuple[RegionTree, RegionMetrics, AnalysisResult]:
+    """Static per-region analysis of a train step for a dense/moe arch."""
+    api = build(cfg)
+    with abstract_init():
+        params, axes = api.init(jax.random.key(0))
+    rules = rules_for(cfg, param=True)
+    act_rules = rules_for(cfg, param=False, sp=True)
+    chips = int(np.prod(mesh.devices.shape))
+    B = shape.global_batch
+    S = shape.seq_len
+    D = cfg.d_model
+    adt = cfg.activation_dtype()
+
+    x_spec = jax.ShapeDtypeStruct((B, S, D), adt)
+    tok_spec = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    from repro.sharding.rules import ACT_RULES, sharding_for
+    x_sh = sharding_for((B, S, D), ("batch", "seq", None), act_rules, mesh)
+    tok_sh = sharding_for((B, S), ("batch", None), act_rules, mesh)
+
+    layer_params = jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+        s.shape[1:], s.dtype), params["layers"])
+    layer_axes = jax.tree.map(lambda ax: ax[1:], axes["layers"],
+                              is_leaf=lambda t: isinstance(t, tuple))
+    lp_sh = tree_shardings(layer_params, layer_axes, rules, mesh)
+    emb_sh = tree_shardings(params["embed"], axes["embed"], rules, mesh)
+
+    positions = jnp.arange(S)
+
+    def attn_fn(lp, x):
+        from repro.models.layers import attention, mla_attention, rms_norm
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        if cfg.mla is not None:
+            out, _ = mla_attention(lp["attn"], cfg, h, positions)
+        else:
+            out, _ = attention(lp["attn"], cfg, h, positions)
+        return x + out
+
+    def ffn_fn(lp, x):
+        from repro.models import moe as moe_mod
+        from repro.models.layers import mlp, rms_norm
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            out, _, _ = moe_mod.moe_block(lp["moe"], cfg, h)
+        else:
+            out = mlp(lp["mlp"], h, cfg.activation)
+        return x + out
+
+    def embed_fn(ep, tokens):
+        from repro.models.layers import embed
+        return embed(ep, cfg, tokens)
+
+    def loss_fn(ep, head, x, labels):
+        p = {"embed": ep}
+        if head is not None:
+            p["head"] = head
+        return transformer.chunked_ce_from_hidden(p, cfg, x, labels)
+
+    def opt_fn(p, g, st):
+        from repro.optim import AdamWConfig, apply_updates
+        return apply_updates(AdamWConfig(), p, g, st)[0]
+
+    from repro.optim import init_opt_state
+    opt_shapes = jax.eval_shape(init_opt_state, params)
+    from repro.launch.specs import model_shardings
+    p_sh, o_sh = model_shardings(cfg, params, axes, opt_shapes,
+                                 {"m": axes, "v": axes, "step": None}, mesh)
+
+    costs: Dict[str, Dict[str, float]] = {}
+    costs["embed"] = _region_cost(embed_fn, (params["embed"], tok_spec),
+                                  (emb_sh, tok_sh), mesh, act_rules)
+    costs["attention"] = _region_cost(attn_fn, (layer_params, x_spec),
+                                      (lp_sh, x_sh), mesh, act_rules)
+    kind = "moe" if cfg.moe is not None else "mlp"
+    costs[kind] = _region_cost(ffn_fn, (layer_params, x_spec),
+                               (lp_sh, x_sh), mesh, act_rules)
+    head = params.get("head")
+    if head is not None:
+        head_sh = tree_shardings({"h": head}, {"h": axes["head"]}, rules,
+                                 mesh)["h"]
+    else:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        head_sh = NamedSharding(mesh, P())
+    costs["head_loss"] = _region_cost(
+        loss_fn, (params["embed"], head, x_spec, tok_spec),
+        (emb_sh, head_sh, x_sh, tok_sh), mesh, act_rules)
+    costs["optimizer"] = _region_cost(opt_fn, (params, params, opt_shapes),
+                                      (p_sh, p_sh, o_sh), mesh, act_rules)
+
+    # scale per-layer regions by depth and the fwd+bwd multiplier
+    L = cfg.n_layers
+    for name in ("attention", kind):
+        for k in costs[name]:
+            costs[name][k] *= L * TRAIN_MULTIPLIER
+    for name in ("embed", "head_loss"):
+        for k in costs[name]:
+            costs[name][k] *= 3.0  # fwd + bwd
+
+    tree = RegionTree("train_step")
+    metrics: Dict[int, Dict[str, float]] = {}
+    for name in costs:
+        r = tree.add(name)
+        c = costs[name]
+        terms = roofline_terms(c["flops"], c["bytes"], c["coll"], chips, hw)
+        t = terms.bound_s
+        metrics[r.region_id] = {
+            WALL_TIME: t,
+            CPU_TIME: max(t - terms.collective_s, 1e-12),
+            COMM_TIME: terms.collective_s,
+            FLOPS: c["flops"],
+            BYTES: c["bytes"],
+            COMM_BYTES: c["coll"],
+        }
+    from repro.core import static_metrics_from_costs
+    rm = static_metrics_from_costs(sorted(metrics), metrics, n_processes=1)
+    az = AutoAnalyzer(tree, peak_flops_per_s=hw.peak_flops)
+    res = az.analyze(rm)
+    return tree, rm, res
+
+
+def report_cell(cfg, shape, mesh) -> str:
+    tree, rm, res = analyze_train_cell(cfg, shape, mesh)
+    lines = [f"AutoAnalyzer disparity triage — {cfg.name} × {shape.name}",
+             render(tree, res)]
+    return "\n".join(lines)

@@ -1,0 +1,34 @@
+"""Model registry: family -> (init, forward, loss_fn, decode...)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+from repro.configs.base import ModelConfig
+
+from . import encdec, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    init: Callable
+    forward: Callable
+    loss_fn: Callable
+    init_decode_state: Callable
+    decode_step: Callable
+
+
+def build(cfg: ModelConfig) -> ModelApi:
+    mod = encdec if cfg.family == "encdec" else transformer
+    return ModelApi(
+        init=lambda key: mod.init(cfg, key),
+        forward=lambda params, tokens, **kw: mod.forward(params, cfg, tokens, **kw),
+        loss_fn=lambda params, batch: mod.loss_fn(params, cfg, batch),
+        init_decode_state=lambda batch, max_len, **kw: mod.init_decode_state(
+            cfg, batch, max_len, **kw),
+        decode_step=lambda params, state, tokens, pos: mod.decode_step(
+            params, cfg, state, tokens, pos),
+    )
+
+
+__all__ = ["ModelApi", "build", "transformer", "encdec"]

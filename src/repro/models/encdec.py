@@ -1,0 +1,199 @@
+"""Encoder-decoder backbone (seamless-m4t-medium).
+
+The speech frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings (B, T_enc, d).  Decoder = causal self-attn +
+cross-attn + MLP.  Decode uses a self-attn KV cache plus precomputed cross
+K/V (computed once from the encoder output).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.sharding import constrain
+
+from .layers import (attention, cross_entropy, embed, init_attention,
+                     init_attention_cache, init_embed, init_mlp,
+                     init_rms_norm, logits_from, make_param, mlp, rms_norm)
+from .transformer import _maybe_remat
+
+Params = Dict[str, Any]
+
+
+def _enc_cfg(cfg: ModelConfig) -> ModelConfig:
+    return cfg.with_(causal=False, window=None)
+
+
+def init(cfg: ModelConfig, key) -> Tuple[Params, Params]:
+    dtype = cfg.parameter_dtype()
+    ke, kenc, kdec, kh = jax.random.split(key, 4)
+    p, a = {}, {}
+    p["embed"], a["embed"] = init_embed(ke, cfg, dtype)
+
+    def init_enc_layer(k):
+        ks = jax.random.split(k, 2)
+        lp, la = {}, {}
+        lp["ln1"], la["ln1"] = init_rms_norm(cfg.d_model, dtype)
+        lp["ln2"], la["ln2"] = init_rms_norm(cfg.d_model, dtype)
+        lp["attn"], la["attn"] = init_attention(ks[0], cfg, dtype)
+        lp["mlp"], la["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+        return lp, la
+
+    def init_dec_layer(k):
+        ks = jax.random.split(k, 3)
+        lp, la = {}, {}
+        for i in (1, 2, 3):
+            lp[f"ln{i}"], la[f"ln{i}"] = init_rms_norm(cfg.d_model, dtype)
+        lp["self_attn"], la["self_attn"] = init_attention(ks[0], cfg, dtype)
+        lp["cross_attn"], la["cross_attn"] = init_attention(ks[1], cfg, dtype)
+        lp["mlp"], la["mlp"] = init_mlp(ks[2], cfg.d_model, cfg.d_ff, dtype)
+        return lp, la
+
+    from .transformer import _stack_init
+    p["enc_layers"], a["enc_layers"] = _stack_init(
+        init_enc_layer, kenc, cfg.n_encoder_layers)
+    p["dec_layers"], a["dec_layers"] = _stack_init(
+        init_dec_layer, kdec, cfg.n_layers)
+    p["enc_norm"], a["enc_norm"] = init_rms_norm(cfg.d_model, dtype)
+    p["final_norm"], a["final_norm"] = init_rms_norm(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        p["head"], a["head"] = make_param(
+            kh, (cfg.d_model, cfg.vocab), ("embed", "vocab"), dtype)
+    return p, a
+
+
+def encode(params: Params, cfg: ModelConfig, embeds) -> jnp.ndarray:
+    """embeds (B, T_enc, d) from the frontend stub -> encoder output."""
+    ecfg = _enc_cfg(cfg)
+    x = embeds.astype(cfg.activation_dtype())
+    T = x.shape[1]
+    positions = jnp.arange(T)
+    x = constrain(x, ("batch", "seq", "act_embed"))
+
+    def block(xx, lp):
+        h, _ = attention(lp["attn"], ecfg, rms_norm(xx, lp["ln1"], cfg.norm_eps),
+                         positions)
+        xx = constrain(xx + h, ("batch", "seq", "act_embed"))
+        h = mlp(lp["mlp"], rms_norm(xx, lp["ln2"], cfg.norm_eps),
+                cfg.activation)
+        return constrain(xx + h, ("batch", "seq", "act_embed")), None
+
+    x, _ = lax.scan(_maybe_remat(block, cfg), x, params["enc_layers"],
+                    unroll=cfg.probe_unroll)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(lp, enc_out):
+    k = jnp.einsum("btd,dhk->bthk", enc_out, lp["cross_attn"]["wk"])
+    v = jnp.einsum("btd,dhk->bthk", enc_out, lp["cross_attn"]["wv"])
+    return k, v
+
+
+def _decoder_block(cfg, xx, lp, positions, enc_out=None, cross_kv=None,
+                   cache=None):
+    h = rms_norm(xx, lp["ln1"], cfg.norm_eps)
+    h, new_cache = attention(lp["self_attn"], cfg, h, positions, cache=cache)
+    xx = constrain(xx + h, ("batch", "seq", "act_embed"))
+    h = rms_norm(xx, lp["ln2"], cfg.norm_eps)
+    if cross_kv is None:
+        k, v = _cross_kv(lp, enc_out)
+    else:
+        k, v = cross_kv
+    kpos = jnp.arange(k.shape[1])
+    h, _ = attention(lp["cross_attn"], cfg, h, positions,
+                     kv_override=(k, v, kpos))
+    xx = constrain(xx + h, ("batch", "seq", "act_embed"))
+    h = mlp(lp["mlp"], rms_norm(xx, lp["ln3"], cfg.norm_eps), cfg.activation)
+    return constrain(xx + h, ("batch", "seq", "act_embed")), new_cache
+
+
+def forward(params: Params, cfg: ModelConfig, tokens, embeds=None,
+            last_only: bool = False, return_hidden: bool = False):
+    """Teacher-forced decoder over encoder(embeds)."""
+    enc_out = encode(params, cfg, embeds)
+    x = embed(params["embed"], cfg, tokens)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+
+    def block(xx, lp):
+        out, _ = _decoder_block(cfg, xx, lp, positions, enc_out=enc_out)
+        return out, None
+
+    x, _ = lax.scan(_maybe_remat(block, cfg), x, params["dec_layers"],
+                    unroll=cfg.probe_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    info = {"aux": jnp.zeros((), jnp.float32)}
+    if return_hidden:
+        return x, info
+    if last_only:
+        x = x[:, -1:]
+    logits = logits_from(params["embed"], params.get("head"), cfg, x)
+    return logits, info
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch):
+    S = batch["tokens"].shape[1]
+    if S * cfg.vocab > 2 ** 26:
+        from .transformer import chunked_ce_from_hidden
+        x, info = forward(params, cfg, batch["tokens"],
+                          embeds=batch["embeds"], return_hidden=True)
+        loss = chunked_ce_from_hidden(params, cfg, x[:, :-1],
+                                      batch["labels"][:, 1:])
+    else:
+        logits, info = forward(params, cfg, batch["tokens"],
+                               embeds=batch["embeds"])
+        loss = cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+    return loss, {"loss": loss, **info}
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      params: Optional[Params] = None,
+                      enc_out: Optional[jnp.ndarray] = None,
+                      enc_len: Optional[int] = None) -> Params:
+    """Self-attn caches + cross K/V.  When ``params``/``enc_out`` are given
+    the cross K/V are computed; otherwise zero placeholders of length
+    ``enc_len`` (dry-run ShapeDtypeStruct path)."""
+    dtype = cfg.activation_dtype()
+    L = cfg.n_layers
+    caches = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[init_attention_cache(cfg, batch, max_len, dtype)
+          for _ in range(L)])
+    H, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    if params is not None and enc_out is not None:
+        ks, vs = [], []
+        for i in range(L):
+            lp = jax.tree.map(lambda x: x[i], params["dec_layers"])
+            k, v = _cross_kv(lp, enc_out)
+            ks.append(k)
+            vs.append(v)
+        cross_k, cross_v = jnp.stack(ks), jnp.stack(vs)
+    else:
+        T = enc_len or cfg.frontend_tokens
+        cross_k = jnp.zeros((L, batch, T, H, dh), dtype)
+        cross_v = jnp.zeros((L, batch, T, H, dh), dtype)
+    return {"layers": caches, "cross_k": cross_k, "cross_v": cross_v}
+
+
+def decode_step(params: Params, cfg: ModelConfig, state: Params,
+                tokens, pos):
+    x = embed(params["embed"], cfg, tokens)
+    positions = pos[None] if pos.ndim == 0 else pos
+
+    def block(xx, inp):
+        lp, cache, ck, cv = inp
+        out, new_cache = _decoder_block(cfg, xx, lp, positions,
+                                        cross_kv=(ck, cv), cache=cache)
+        return out, new_cache
+
+    x, new_caches = lax.scan(
+        block, x, (params["dec_layers"], state["layers"],
+                   state["cross_k"], state["cross_v"]),
+        unroll=cfg.probe_unroll)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_from(params["embed"], params.get("head"), cfg, x)
+    return logits, {**state, "layers": new_caches}

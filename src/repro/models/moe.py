@@ -1,0 +1,146 @@
+"""Routed mixture-of-experts with capacity-bounded sort-based dispatch.
+
+Design (DESIGN.md §6):
+  * top-k routing with softmax gates, optional shared experts;
+  * dispatch by stable sort of (expert_id) -> scatter into an (E, C, D)
+    buffer, expert batched matmuls, combine by scatter-add — the standard
+    TPU-friendly static-shape formulation (GShard/Switch lineage) without
+    the O(N·E·C) one-hot dispatch tensor;
+  * per-expert token counts are returned — these are the per-"process"
+    load vectors consumed by the AutoAnalyzer dissimilarity pass (the
+    paper's ST load-imbalance scenario, DESIGN.md §4);
+  * aux load-balancing loss (Switch-style) with configurable weight — the
+    "dynamic load dispatching" fix of paper §6.1.1.
+
+Sharding: 'ep' puts the expert dim on the model axis; 'tp' (for E <
+model-axis) keeps experts replicated and shards each expert's hidden dim.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.sharding import constrain
+
+from .layers import _act, make_param
+
+Params = Dict[str, Any]
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Tuple[Params, Params]:
+    mo = cfg.moe
+    d, ff, E = cfg.d_model, mo.d_ff, mo.n_experts
+    ks = jax.random.split(key, 5)
+    p, a = {}, {}
+    p["router"], a["router"] = make_param(ks[0], (d, E), ("embed", "expert_r"), dtype)
+    p["wi"], a["wi"] = make_param(ks[1], (E, d, ff), ("expert", "embed", "mlp"), dtype)
+    p["wg"], a["wg"] = make_param(ks[2], (E, d, ff), ("expert", "embed", "mlp"), dtype)
+    p["wo"], a["wo"] = make_param(ks[3], (E, ff, d), ("expert", "mlp", "embed"), dtype)
+    if mo.n_shared:
+        sk = jax.random.split(ks[4], 3)
+        p["shared_wi"], a["shared_wi"] = make_param(
+            sk[0], (d, ff * mo.n_shared), ("embed", "mlp"), dtype)
+        p["shared_wg"], a["shared_wg"] = make_param(
+            sk[1], (d, ff * mo.n_shared), ("embed", "mlp"), dtype)
+        p["shared_wo"], a["shared_wo"] = make_param(
+            sk[2], (ff * mo.n_shared, d), ("mlp", "embed"), dtype)
+    return p, a
+
+
+def _dispatch_row(xrow, probs, k: int, capacity: int):
+    """Dispatch one batch row's S tokens.  xrow (S, D); probs (S, E).
+    Returns (buf (E, C, D), slot (S*k,), token_idx (S*k,), gate (S*k,),
+    keep (S*k,), counts (E,)).  All indexing is ROW-LOCAL, so the batch dim
+    stays the data-parallel sharding axis — no cross-shard scatter (the
+    beyond-paper collective fix recorded in EXPERIMENTS.md §Perf)."""
+    S, D = xrow.shape
+    E = probs.shape[-1]
+    gate_vals, expert_ids = lax.top_k(probs, k)           # (S, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True),
+                                        1e-9)
+    flat_e = expert_ids.reshape(-1)                       # (S*k,)
+    flat_g = gate_vals.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(S), k)
+    order = jnp.argsort(flat_e, stable=True)
+    se, sg, st = flat_e[order], flat_g[order], flat_t[order]
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(S * k) - starts[se]
+    keep = pos_in_e < capacity
+    slot = se * capacity + jnp.where(keep, pos_in_e, 0)
+    buf = jnp.zeros((E * capacity, D), xrow.dtype)
+    contrib = jnp.where(keep[:, None], xrow[st], 0.0).astype(xrow.dtype)
+    buf = buf.at[slot].add(contrib)
+    return buf.reshape(E, capacity, D), slot, st, sg, keep, counts
+
+
+def _combine_row(y_buf, slot, st, sg, keep, S: int):
+    """y_buf (E*C, D) -> (S, D) for one row.  Gates are cast to the
+    activation dtype BEFORE multiplying — an f32 gate would silently promote
+    the whole residual stream (2x collective/HBM traffic; §Perf iter-2)."""
+    D = y_buf.shape[-1]
+    gate = (sg * keep).astype(y_buf.dtype)
+    gathered = y_buf[slot] * gate[:, None]
+    return jnp.zeros((S, D), y_buf.dtype).at[st].add(gathered)
+
+
+def moe_block(params: Params, cfg: ModelConfig, x,
+              capacity: Optional[int] = None):
+    """x: (B, S, D) -> (y, aux_loss, expert_counts (E,)).
+
+    Dispatch is per batch row (vmapped): indices never cross the
+    data-parallel sharding axis, so the SPMD partitioner emits no
+    cross-shard scatter traffic — the expert matmul's TP reduction is the
+    only collective, as in the dense MLP."""
+    mo = cfg.moe
+    B, S, D = x.shape
+    E, k = mo.n_experts, mo.top_k
+
+    logits = jnp.einsum("bsd,de->bse", x, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # Switch-style aux loss: E * sum_e f_e * p_e (f = fraction of top-1
+    # dispatches, p = mean router prob).
+    me = probs.mean(axis=(0, 1))
+    top1 = jnp.argmax(probs, axis=-1)
+    ce = jax.nn.one_hot(top1, E, dtype=jnp.float32).mean(axis=(0, 1))
+    aux = mo.aux_loss_weight * E * jnp.sum(me * ce)
+
+    # Small-S (decode) rows are grouped shard-locally before dispatch: a
+    # single decode token would otherwise force capacity>=1 PER EXPERT PER
+    # ROW (E/k x padded expert compute).  G=gcd(B,8) keeps groups inside a
+    # data shard on the production mesh (§Perf mixtral decode iteration).
+    import math
+    G = math.gcd(B, 8) if S < 64 else 1
+    Bg, Sg = B // G, G * S
+    xg = x.reshape(Bg, Sg, D)
+    probs_g = probs.reshape(Bg, Sg, E)
+    if capacity is None:
+        capacity = int(np.ceil(Sg * k / E * mo.capacity_factor))
+    capacity = max(int(capacity), 1)
+
+    buf, slot, st, sg, keep, counts = jax.vmap(
+        lambda xr, pr: _dispatch_row(xr, pr, k, capacity))(xg, probs_g)
+    buf = constrain(buf, ("batch", "expert", "capacity", "act_embed"))
+
+    # ---- expert computation (batched over B and E) -----------------------
+    h = _act(jnp.einsum("becd,edf->becf", buf, params["wg"]), cfg.activation)
+    h = h * jnp.einsum("becd,edf->becf", buf, params["wi"])
+    y_buf = jnp.einsum("becf,efd->becd", h, params["wo"])
+    y_buf = constrain(y_buf, ("batch", "expert", "capacity", "act_embed"))
+
+    y = jax.vmap(lambda yb, sl, t, g, kp: _combine_row(
+        yb.reshape(E * capacity, D), sl, t, g, kp, Sg))(
+        y_buf, slot, st, sg, keep)
+
+    out = y.reshape(B, S, D)
+    if mo.n_shared:
+        h = _act(jnp.einsum("bsd,df->bsf", x, params["shared_wg"]), cfg.activation)
+        h = h * jnp.einsum("bsd,df->bsf", x, params["shared_wi"])
+        out = out + jnp.einsum("bsf,fd->bsd", h, params["shared_wo"])
+    return out, aux, counts.sum(axis=0)

@@ -1,0 +1,110 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+    r_t = sigmoid(W_a x_t)            # recurrence gate
+    i_t = sigmoid(W_x x_t)            # input gate
+    a_t = a ** (c * r_t)              # a = sigmoid(Λ), c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+The scan is *elementwise-gated linear*, so it is computed with
+``lax.associative_scan`` (log-depth on TPU) rather than a sequential scan —
+a TPU-native adaptation recorded in DESIGN.md (beyond-paper optimization;
+the sequential scan is kept as the oracle).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+from .layers import make_param, uniform_param
+
+Params = Dict[str, Any]
+_C = 8.0
+
+
+def init_rglru_block(key, cfg: ModelConfig, dtype) -> Tuple[Params, Params]:
+    d = cfg.d_model
+    w = cfg.recurrent.lru_width or d
+    cw = cfg.recurrent.conv_width
+    ks = jax.random.split(key, 6)
+    p, a = {}, {}
+    p["w_in"], a["w_in"] = make_param(ks[0], (d, w), ("embed", "mlp"), dtype)
+    p["w_out"], a["w_out"] = make_param(ks[1], (w, d), ("mlp", "embed"), dtype)
+    p["conv"], a["conv"] = make_param(ks[2], (cw, w), ("conv", "mlp"), dtype)
+    p["w_a"], a["w_a"] = make_param(ks[3], (w, w), ("mlp", "mlp2"), dtype)
+    p["w_x"], a["w_x"] = make_param(ks[4], (w, w), ("mlp", "mlp2"), dtype)
+    # Λ init so that a = sigmoid(Λ) ~ 0.95..0.999 (per Griffin)
+    p["lam"] = uniform_param(ks[5], (w,), dtype, minval=3.0, maxval=6.0)
+    a["lam"] = ("mlp",)
+    return p, a
+
+
+def _causal_conv1d(x, w, state: Optional[jnp.ndarray] = None):
+    """x (B,T,W), w (cw,W): depthwise causal conv.  `state` is the last
+    cw-1 inputs for decode."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else jnp.zeros_like(x[:, :0])
+    return out, new_state
+
+
+def rglru_scan(a, bx, h0=None):
+    """h_t = a_t h_{t-1} + bx_t  via associative scan.  a, bx: (B,T,W)."""
+    if h0 is not None:
+        # fold the initial state into the first step:
+        # h_1 = a_1 h_0 + b_1  ==  scan with b_1' = b_1 + a_1 h_0
+        bx = bx.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = lax.associative_scan(combine, (a, bx), axis=1)
+    return hh
+
+
+def rglru_scan_reference(a, bx, h0=None):
+    """Sequential oracle for :func:`rglru_scan`."""
+    B, T, W = a.shape
+    h = jnp.zeros((B, W), a.dtype) if h0 is None else h0
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    _, hs = lax.scan(step, h, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(bx, 1, 0)))
+    return jnp.moveaxis(hs, 1, 0)
+
+
+def rglru_block(params: Params, cfg: ModelConfig, x,
+                state: Optional[Dict] = None):
+    """x: (B,T,D) -> (y, new_state).  state = {"conv": .., "h": ..}."""
+    u = jnp.einsum("btd,dw->btw", x, params["w_in"])
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = _causal_conv1d(u, params["conv"], conv_state)
+    r = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", u, params["w_a"]).astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("btw,wv->btv", u, params["w_x"]).astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(params["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = i * u.astype(jnp.float32)
+    bx = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated
+    h0 = state["h"] if state is not None else None
+    if x.shape[1] == 1 and h0 is not None:
+        h = a[:, 0] * h0 + bx[:, 0]
+        hs = h[:, None]
+    else:
+        hs = rglru_scan(a, bx, h0)
+        h = hs[:, -1]
+    y = jnp.einsum("btw,wd->btd", hs.astype(x.dtype), params["w_out"])
+    return y, {"conv": new_conv, "h": h}

@@ -1,0 +1,7 @@
+from .mpibzip2 import mpibzip2_scenario
+from .npar1way import npar1way_scenario
+from .st import (IMBALANCE_11, st_fine_scenario, st_scenario,
+                 st_total_time)
+
+__all__ = ["IMBALANCE_11", "mpibzip2_scenario", "npar1way_scenario",
+           "st_fine_scenario", "st_scenario", "st_total_time"]

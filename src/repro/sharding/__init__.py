@@ -1,0 +1,5 @@
+from .rules import (ACT_RULES, PARAM_RULES, activation_sharding, constrain,
+                    rules_for, sharding_for, spec_for, tree_shardings)
+
+__all__ = ["ACT_RULES", "PARAM_RULES", "activation_sharding", "constrain",
+           "rules_for", "sharding_for", "spec_for", "tree_shardings"]

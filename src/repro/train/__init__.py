@@ -1,0 +1,7 @@
+from . import checkpoint
+from .fault_tolerance import remesh, run_with_restarts
+from .loop import (StragglerMonitor, Trainer, TrainerConfig, make_eval_step,
+                   make_train_step)
+
+__all__ = ["checkpoint", "remesh", "run_with_restarts", "StragglerMonitor",
+           "Trainer", "TrainerConfig", "make_eval_step", "make_train_step"]

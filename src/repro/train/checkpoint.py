@@ -1,0 +1,135 @@
+"""Mesh-agnostic atomic checkpointing.
+
+Arrays are gathered to host numpy and written as a flat npz keyed by tree
+path, plus a JSON manifest.  Writes are atomic (tmp dir + rename), so a
+crash mid-save never corrupts the latest checkpoint — the fault-tolerance
+layer restarts from the newest complete step.  Because leaves are stored
+unsharded-logical, a checkpoint saved under one mesh restores under any
+other (elastic re-mesh).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+_NATIVE_KINDS = set("biufc")
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Dict[str, str]]:
+    """Flatten to npz-safe arrays.  Non-native dtypes (bfloat16, fp8 — npz
+    cannot round-trip them) are stored as uint views; ``dtypes`` records the
+    original dtype per key for restore."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays: Dict[str, np.ndarray] = {}
+    dtypes: Dict[str, str] = {}
+    for path, leaf in flat:
+        key = _path_str(path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in _NATIVE_KINDS:
+            dtypes[key] = str(arr.dtype)
+            arr = arr.view(np.dtype(f"uint{arr.dtype.itemsize * 8}"))
+        arrays[key] = arr
+    return arrays, dtypes
+
+
+def save(ckpt_dir: str, step: int, trees: Dict[str, Any],
+         meta: Optional[Dict] = None, keep: int = 3) -> str:
+    """trees: {"params": ..., "opt_state": ...}.  Returns the step dir."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        all_dtypes: Dict[str, Dict[str, str]] = {}
+        for name, tree in trees.items():
+            arrays, dtypes = _flatten(tree)
+            np.savez(os.path.join(tmp, f"{name}.npz"), **arrays)
+            all_dtypes[name] = dtypes
+        manifest = {"step": int(step), "trees": sorted(trees),
+                    "dtypes": all_dtypes, "meta": meta or {}}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and os.path.exists(
+                os.path.join(ckpt_dir, d, "manifest.json")):
+            steps.append(int(d[len("step_"):]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, templates: Dict[str, Any],
+            step: Optional[int] = None, shardings: Optional[Dict] = None
+            ) -> Tuple[int, Dict[str, Any]]:
+    """Restore trees shaped like ``templates``; apply per-tree ``shardings``
+    (matching pytrees of NamedSharding) when given — this is the elastic
+    re-mesh path."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    out: Dict[str, Any] = {}
+    for name, template in templates.items():
+        dtypes = manifest.get("dtypes", {}).get(name, {})
+        with np.load(os.path.join(d, f"{name}.npz")) as z:
+            data = {}
+            for k in z.files:
+                arr = z[k]
+                if k in dtypes:
+                    arr = arr.view(jax.numpy.dtype(dtypes[k]))
+                data[k] = arr
+        flat = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        shard_tree = shardings.get(name) if shardings else None
+        shard_leaves = jax.tree.leaves(shard_tree) if shard_tree is not None else None
+        for i, (path, leaf) in enumerate(flat[0]):
+            key = _path_str(path)
+            arr = data[key]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"{name}:{key} shape {arr.shape} != "
+                                 f"{leaf.shape}")
+            if shard_leaves is not None:
+                leaves.append(jax.device_put(arr, shard_leaves[i]))
+            else:
+                leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+        out[name] = jax.tree_util.tree_unflatten(flat[1], leaves)
+    return step, out

@@ -1,0 +1,59 @@
+"""Fault tolerance: restart-on-failure and elastic re-meshing.
+
+* :func:`run_with_restarts` — supervises a Trainer; on an exception it
+  rebuilds from the newest complete checkpoint and continues, up to
+  ``max_restarts`` (node-failure recovery; checkpoints are atomic so a
+  crash mid-save is harmless).
+* :func:`remesh` — restores a checkpoint under a *different* mesh
+  (elastic scale-up/down): checkpoints store unsharded-logical arrays, so
+  the restore simply applies the new shardings.
+* Straggler mitigation lives in loop.StragglerMonitor (the AutoAnalyzer
+  dissimilarity pass applied to per-shard step times).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from repro.sharding import rules_for, tree_shardings
+
+from . import checkpoint as ckpt_mod
+from .loop import Trainer
+
+
+def run_with_restarts(make_trainer: Callable[[], Trainer], steps: int,
+                      max_restarts: int = 3,
+                      fail_at: Optional[int] = None) -> Trainer:
+    """Run ``steps`` total steps, recreating the trainer from its latest
+    checkpoint after each failure."""
+    restarts = 0
+    trainer = make_trainer()
+    trainer.maybe_resume()
+    while True:
+        try:
+            remaining = steps - trainer.step
+            if remaining <= 0:
+                return trainer
+            trainer.run(remaining, fail_at=fail_at)
+            return trainer
+        except RuntimeError:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            fail_at = None  # injected failure fires once
+            trainer = make_trainer()
+            trainer.maybe_resume()
+
+
+def remesh(ckpt_dir: str, cfg, templates: Dict[str, Any], new_mesh,
+           axes_tree=None):
+    """Restore a checkpoint under ``new_mesh`` (elastic re-mesh).  When an
+    ``axes_tree`` (logical axes for params) is given, the restored params
+    get proper NamedShardings; otherwise they restore replicated."""
+    shardings = None
+    if axes_tree is not None:
+        rules = rules_for(cfg, param=True)
+        shardings = {"params": tree_shardings(
+            templates["params"], axes_tree, rules, new_mesh)}
+    return ckpt_mod.restore(ckpt_dir, templates, shardings=shardings)

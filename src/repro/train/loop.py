@@ -1,0 +1,168 @@
+"""Training loop: step function, jit/pjit wiring, hooks.
+
+The same ``make_train_step`` serves three callers:
+  * CPU smoke runs (no mesh) — tests and examples;
+  * the production dry-run (512-device mesh, abstract lowering);
+  * real training (mesh + shardings + donation).
+
+AutoAnalyzer is a first-class hook: per-step timings, MoE expert-load
+vectors and data-shard stats feed the dissimilarity/disparity passes every
+``analyze_every`` steps (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import (AutoAnalyzer, RegionTree, optics_cluster)
+from repro.data import DataConfig, device_batch
+from repro.models import build
+from repro.optim import AdamWConfig, apply_updates, init_opt_state
+from repro.sharding import activation_sharding, rules_for, tree_shardings
+
+from . import checkpoint as ckpt_mod
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig) -> Callable:
+    api = build(cfg)
+
+    def train_step(params, opt_state, batch):
+        (total, info), grads = jax.value_and_grad(
+            api.loss_fn, has_aux=True)(params, batch)
+        new_params, new_opt, om = apply_updates(opt_cfg, params, grads,
+                                                opt_state)
+        metrics = {"loss": info["loss"], "total_loss": total, **om}
+        if "expert_counts" in info:
+            metrics["expert_counts"] = info["expert_counts"]
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    api = build(cfg)
+
+    def eval_step(params, batch):
+        loss, info = api.loss_fn(params, batch)
+        return info["loss"]
+
+    return eval_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    analyze_every: int = 0         # 0 = off
+    seed: int = 0
+    straggler_threshold: float = 1.75  # step_time > thr × running median
+
+
+class StragglerMonitor:
+    """Dissimilarity-based straggler detection (paper §4.2.1 applied to the
+    time dimension).  Per-shard step-time vectors are clustered with the
+    simplified OPTICS algorithm when available; the scalar fallback flags
+    steps slower than ``threshold ×`` the running median (restart/evict
+    trigger for the fault-tolerance layer)."""
+
+    def __init__(self, threshold: float = 1.75, window: int = 32):
+        self.threshold = threshold
+        self.window = window
+        self.times: List[float] = []
+        self.events: List[Dict] = []
+
+    def observe_step(self, step: int, seconds: float,
+                     per_shard: Optional[np.ndarray] = None) -> bool:
+        self.times.append(seconds)
+        hist = self.times[-self.window:]
+        med = float(np.median(hist))
+        flagged = len(hist) >= 8 and seconds > self.threshold * med
+        if per_shard is not None and len(per_shard) > 1:
+            res = optics_cluster(np.asarray(per_shard)[:, None])
+            if res.n_clusters > 1:
+                flagged = True
+                self.events.append({"step": step, "kind": "shard-dissimilarity",
+                                    "clusters": res.n_clusters})
+        if flagged:
+            self.events.append({"step": step, "kind": "slow-step",
+                                "seconds": seconds, "median": med})
+        return flagged
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, opt_cfg: AdamWConfig,
+                 data_cfg: DataConfig, tcfg: TrainerConfig,
+                 mesh=None):
+        self.cfg, self.opt_cfg, self.data_cfg, self.tcfg = (
+            cfg, opt_cfg, data_cfg, tcfg)
+        self.mesh = mesh
+        self.api = build(cfg)
+        self.monitor = StragglerMonitor(tcfg.straggler_threshold)
+        self.history: List[Dict] = []
+        self._build()
+
+    def _build(self) -> None:
+        key = jax.random.key(self.tcfg.seed)
+        self.params, self.param_axes = self.api.init(key)
+        self.opt_state = init_opt_state(self.params)
+        step_fn = make_train_step(self.cfg, self.opt_cfg)
+        self.train_step = jax.jit(step_fn, donate_argnums=(0, 1))
+        self.step = 0
+
+    # -- checkpoint/resume --------------------------------------------------
+    def maybe_resume(self) -> bool:
+        d = self.tcfg.ckpt_dir
+        if not d:
+            return False
+        latest = ckpt_mod.latest_step(d)
+        if latest is None:
+            return False
+        templates = {"params": self.params, "opt_state": self.opt_state}
+        step, trees = ckpt_mod.restore(d, templates)
+        self.params, self.opt_state = trees["params"], trees["opt_state"]
+        self.step = step
+        return True
+
+    def save(self) -> None:
+        if self.tcfg.ckpt_dir:
+            ckpt_mod.save(self.tcfg.ckpt_dir, self.step,
+                          {"params": self.params,
+                           "opt_state": self.opt_state},
+                          meta={"config": self.cfg.name})
+
+    # -- run -----------------------------------------------------------------
+    def run(self, steps: Optional[int] = None,
+            fail_at: Optional[int] = None) -> List[Dict]:
+        """``fail_at`` injects a crash (fault-tolerance tests)."""
+        steps = steps if steps is not None else self.tcfg.steps
+        end = self.step + steps
+        while self.step < end:
+            batch = device_batch(self.data_cfg, self.step)
+            if fail_at is not None and self.step == fail_at:
+                raise RuntimeError(f"injected failure at step {self.step}")
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self.train_step(
+                self.params, self.opt_state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.monitor.observe_step(self.step, dt)
+            rec = {"step": self.step, "loss": loss, "seconds": dt,
+                   "grad_norm": float(metrics["grad_norm"])}
+            if "expert_counts" in metrics:
+                rec["expert_counts"] = np.asarray(metrics["expert_counts"])
+            self.history.append(rec)
+            self.step += 1
+            if self.tcfg.ckpt_every and self.step % self.tcfg.ckpt_every == 0:
+                self.save()
+        self.save()
+        return self.history

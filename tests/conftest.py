@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests must see 1 CPU device (the dry-run's 512-device flag is set only in
+# launch/dryrun.py's own process, never globally).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,88 @@
+"""Unit tests for the two clustering algorithms (paper §4.2)."""
+import numpy as np
+import pytest
+
+from repro.core import (ClusterResult, dissimilarity_severity, is_similar,
+                        kmeans_1d, kmeans_severity, optics_cluster)
+
+
+class TestOptics:
+    def test_identical_vectors_one_cluster(self):
+        v = np.ones((16, 8))
+        assert optics_cluster(v).n_clusters == 1
+        assert is_similar(v)
+
+    def test_small_noise_one_cluster(self):
+        rng = np.random.default_rng(0)
+        v = 100.0 * np.ones((8, 4)) + rng.normal(0, 0.1, (8, 4))
+        assert optics_cluster(v).n_clusters == 1
+
+    def test_outlier_isolated(self):
+        v = np.ones((8, 4))
+        v[3] *= 5.0
+        res = optics_cluster(v)
+        assert res.n_clusters == 2
+        assert res.labels[3] != res.labels[0]
+
+    def test_paper_fig9_five_clusters(self):
+        """ST: 8 processes in 5 clusters {0},{1,2},{3},{4,6},{5,7}."""
+        base = np.zeros((8, 14))
+        base[:, 10] = [10.0, 40.0, 40.5, 70.0, 100.0, 130.0, 100.5, 130.5]
+        res = optics_cluster(base)
+        assert res.n_clusters == 5
+        groups = {frozenset(res.members(c)) for c in range(5)}
+        assert groups == {frozenset({0}), frozenset({1, 2}), frozenset({3}),
+                          frozenset({4, 6}), frozenset({5, 7})}
+
+    def test_threshold_absolute(self):
+        v = np.array([[0.0], [1.0], [10.0]])
+        res = optics_cluster(v, threshold=2.0)
+        assert res.n_clusters == 2
+
+    def test_same_partition(self):
+        v = np.ones((4, 2))
+        a = optics_cluster(v)
+        b = optics_cluster(v[::-1])
+        assert a.same_partition(b)
+
+    def test_severity_zero_when_similar(self):
+        v = np.ones((4, 3))
+        res = optics_cluster(v)
+        assert dissimilarity_severity(res, v) == 0.0
+
+    def test_severity_positive_when_dissimilar(self):
+        v = np.ones((8, 3))
+        v[0] *= 10
+        res = optics_cluster(v)
+        assert 0.0 < dissimilarity_severity(res, v) <= 1.0
+
+
+class TestKMeans:
+    def test_five_bands(self):
+        vals = [0.01, 0.02, 0.01, 0.02, 0.1, 0.12, 0.02, 0.3, 0.01, 0.01,
+                0.41, 0.01, 0.02, 0.43]
+        sev = kmeans_severity(np.array(vals))
+        assert sev.max() == 4 and sev.min() == 0
+        # paper Fig.12 analogue: the two largest are very-high, 0.3 at least
+        # high, and the small values stay in the bottom bands
+        assert sev[10] == 4 and sev[13] == 4
+        assert sev[7] >= 3
+        assert sev[0] <= 1 and sev[8] <= 1
+
+    def test_ordering_consistent_with_values(self):
+        vals = np.array([0.0, 1.0, 2.0, 3.0, 4.0, 5.0])
+        sev = kmeans_severity(vals)
+        assert all(s1 <= s2 for s1, s2 in zip(sev, sev[1:]))
+
+    def test_few_distinct_values(self):
+        sev = kmeans_severity(np.array([1.0, 1.0, 2.0]))
+        assert sev[0] == sev[1] < sev[2]
+
+    def test_empty(self):
+        assert kmeans_severity(np.array([])).size == 0
+
+    def test_kmeans_1d_labels_sorted_by_centroid(self):
+        rng = np.random.default_rng(1)
+        x = np.concatenate([rng.normal(0, .1, 50), rng.normal(10, .1, 50)])
+        lab = kmeans_1d(x, 2)
+        assert set(lab[:50]) == {0} and set(lab[50:]) == {1}

@@ -1,0 +1,114 @@
+"""Numerical-consistency tests across equivalent model paths:
+chunked vs naive attention, chunked vs sequential WKV, associative vs
+sequential RG-LRU scan, and decode-vs-forward logits equality."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import build
+from repro.models.layers import chunked_attention, naive_attention
+from repro.models.rglru import rglru_scan, rglru_scan_reference
+from repro.models.rwkv import wkv6_chunked, wkv6_reference
+
+
+class TestAttentionPaths:
+    @pytest.mark.parametrize("causal,window", [(True, None), (True, 24),
+                                               (False, None)])
+    def test_chunked_matches_naive(self, causal, window):
+        key = jax.random.key(0)
+        B, Q, H, KV, dh = 2, 64, 4, 2, 16
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, Q, H, dh))
+        k = jax.random.normal(ks[1], (B, Q, KV, dh))
+        v = jax.random.normal(ks[2], (B, Q, KV, dh))
+        pos = jnp.arange(Q)
+        a = naive_attention(q, k, v, causal=causal, window=window,
+                            q_positions=pos, k_positions=pos)
+        b = chunked_attention(q, k, v, causal=causal, window=window,
+                              q_positions=pos, k_positions=pos,
+                              q_block=16, k_block=16)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-5, rtol=2e-5)
+
+    def test_chunked_unroll_matches(self):
+        key = jax.random.key(1)
+        B, Q, H, dh = 1, 48, 2, 8
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, Q, H, dh))
+        k = jax.random.normal(ks[1], (B, Q, H, dh))
+        v = jax.random.normal(ks[2], (B, Q, H, dh))
+        pos = jnp.arange(Q)
+        a = chunked_attention(q, k, v, causal=True, window=None,
+                              q_positions=pos, k_positions=pos,
+                              q_block=16, k_block=16, unroll=False)
+        b = chunked_attention(q, k, v, causal=True, window=None,
+                              q_positions=pos, k_positions=pos,
+                              q_block=16, k_block=16, unroll=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+
+
+class TestRecurrences:
+    def test_wkv6_chunked_vs_sequential(self):
+        key = jax.random.key(0)
+        B, T, H, dh = 2, 80, 3, 8
+        ks = jax.random.split(key, 5)
+        r, k, v = (jax.random.normal(ks[i], (B, T, H, dh)) for i in range(3))
+        w = jax.random.uniform(ks[3], (B, T, H, dh), minval=0.8,
+                               maxval=0.999)
+        u = jax.random.normal(ks[4], (H, dh)) * 0.3
+        ref, Sr = wkv6_reference(r, k, v, w, u)
+        out, S = wkv6_chunked(r, k, v, w, u, jnp.zeros((B, H, dh, dh)),
+                              chunk=16)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=5e-4, rtol=1e-3)
+        np.testing.assert_allclose(np.asarray(S), np.asarray(Sr),
+                                   atol=5e-4, rtol=1e-3)
+
+    def test_rglru_associative_vs_sequential(self):
+        key = jax.random.key(0)
+        B, T, W = 2, 33, 8
+        a = jax.random.uniform(key, (B, T, W), minval=0.7, maxval=0.99)
+        bx = jax.random.normal(jax.random.key(1), (B, T, W))
+        h0 = jax.random.normal(jax.random.key(2), (B, W))
+        got = rglru_scan(a, bx, h0)
+        ref = rglru_scan_reference(a, bx, h0)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_rglru_no_initial_state(self):
+        a = jnp.full((1, 5, 2), 0.5)
+        bx = jnp.ones((1, 5, 2))
+        got = rglru_scan(a, bx)
+        ref = rglru_scan_reference(a, bx)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=1e-6)
+
+
+DECODE_ARCHS = ["gemma-7b", "h2o-danube-3-4b", "deepseek-v2-lite-16b",
+                "rwkv6-3b", "recurrentgemma-9b", "mixtral-8x22b"]
+
+
+class TestDecodeConsistency:
+    @pytest.mark.parametrize("arch", DECODE_ARCHS)
+    def test_decode_matches_forward(self, arch):
+        """Feeding tokens one-by-one through the cached decode path must
+        reproduce the teacher-forced forward logits."""
+        cfg = get_arch(arch).smoke
+        api = build(cfg)
+        params, _ = api.init(jax.random.key(0))
+        B, S = 2, 12
+        toks = jax.random.randint(jax.random.key(3), (B, S), 0, cfg.vocab)
+        full_logits, _ = api.forward(params, toks)
+        state = api.init_decode_state(B, S + 2)
+        step = jax.jit(lambda p, s, t, pos: api.decode_step(p, s, t, pos))
+        errs = []
+        for pos in range(S):
+            logits, state = step(params, state, toks[:, pos:pos + 1],
+                                 jnp.int32(pos))
+            errs.append(float(jnp.max(jnp.abs(
+                logits[:, 0] - full_logits[:, pos]))))
+        scale = float(jnp.max(jnp.abs(full_logits))) + 1e-9
+        assert max(errs) / scale < 5e-3, errs

@@ -1,0 +1,248 @@
+"""Reproduction of the paper's published analyses (§6.1-§6.4).
+
+Each test asserts a claim the paper states for ST, NPAR1WAY or MPIBZIP2,
+against the synthetic scenarios that inject the published behaviours.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (COMM_BYTES, CPU_TIME, FLOPS, HBM_INTENSITY,
+                        HOST_BYTES, VMEM_PRESSURE, WALL_TIME, AutoAnalyzer,
+                        render)
+from repro.scenarios import (mpibzip2_scenario, npar1way_scenario,
+                             st_scenario, st_total_time)
+
+
+@pytest.fixture(scope="module")
+def st():
+    tree, rm = st_scenario()
+    return tree, rm, AutoAnalyzer(tree).analyze(rm)
+
+
+@pytest.fixture(scope="module")
+def npar():
+    tree, rm = npar1way_scenario()
+    return tree, rm, AutoAnalyzer(tree).analyze(rm)
+
+
+@pytest.fixture(scope="module")
+def bzip():
+    tree, rm = mpibzip2_scenario()
+    return tree, rm, AutoAnalyzer(tree).analyze(rm)
+
+
+class TestST:
+    """Paper §6.1 (Fig. 9, Fig. 12, Tables 3-4)."""
+
+    def test_fig9_five_clusters(self, st):
+        _, _, res = st
+        assert res.dissimilarity.baseline.n_clusters == 5
+
+    def test_fig9_cccr_is_region_11(self, st):
+        _, _, res = st
+        assert res.dissimilarity.ccrs == [11, 14]
+        assert res.dissimilarity.cccrs == [11]
+
+    def test_table3_root_cause_instructions(self, st):
+        """Core attribute a5 = instructions retired (FLOPs analogue)."""
+        _, _, res = st
+        assert res.dissimilarity_causes == [frozenset({FLOPS})]
+
+    def test_fig12_disparity_bands(self, st):
+        _, _, res = st
+        sev = res.disparity.severities
+        assert sev[11] == 4 and sev[14] == 4       # very high
+        assert sev[8] >= 3                          # high
+        for r in (1, 3, 4, 7, 9, 10, 13):           # trivial regions
+            assert sev[r] <= 1
+
+    def test_disparity_cccrs(self, st):
+        _, _, res = st
+        assert res.disparity.ccrs == [8, 11, 14]
+        # 11 nested in 14 with equal severity => 11 is the CCCR, not 14
+        assert res.disparity.cccrs == [8, 11]
+
+    def test_table4_root_causes(self, st):
+        """Core = {a2, a3} = L2-miss-rate + disk-I/O analogues."""
+        _, _, res = st
+        assert res.disparity_causes == [frozenset({HBM_INTENSITY,
+                                                   HOST_BYTES})]
+
+    def test_per_region_causes_match_paper(self, st):
+        _, _, res = st
+        assert any("disk" in c or "host" in c
+                   for c in res.per_region_causes[8])
+        assert any("HBM" in c or "L2" in c
+                   for c in res.per_region_causes[11])
+
+    def test_optimized_dissimilarity_one_cluster(self):
+        """§6.1.1: after dynamic load dispatching all processes cluster
+        together."""
+        tree, rm = st_scenario(optimize_dissimilarity=True)
+        res = AutoAnalyzer(tree).analyze(rm)
+        assert not res.dissimilarity.exists
+
+    def test_optimized_disparity_reduces_crnm(self):
+        """§6.1.1: region 11's average CRNM drops (0.41 -> 0.26 in the
+        paper) and region 8 stops being a bottleneck."""
+        tree, rm = st_scenario()
+        tree2, rm2 = st_scenario(optimize_disparity=True)
+        rids = [r for r in rm.region_ids]
+        before = dict(zip(rids, rm.crnm_all(rids)))
+        after = dict(zip(rids, rm2.crnm_all(rids)))
+        assert after[11] < before[11]
+        res2 = AutoAnalyzer(tree2).analyze(rm2)
+        assert 8 not in res2.disparity.ccrs
+
+    def test_fig14_speedup_ordering(self):
+        """Fig. 14: each fix speeds up ST; both fixes speed it up most."""
+        base = st_total_time(st_scenario()[1])
+        dis = st_total_time(st_scenario(optimize_dissimilarity=True)[1])
+        disp = st_total_time(st_scenario(optimize_disparity=True)[1])
+        both = st_total_time(st_scenario(optimize_dissimilarity=True,
+                                         optimize_disparity=True)[1])
+        assert both < min(dis, disp) <= max(dis, disp) < base
+        # paper: +170% overall => >2.5x
+        assert base / both > 2.0
+
+
+class TestNPAR1WAY:
+    """Paper §6.2."""
+
+    def test_no_dissimilarity(self, npar):
+        _, _, res = npar
+        assert not res.dissimilarity.exists
+
+    def test_disparity_regions_3_and_12(self, npar):
+        _, _, res = npar
+        assert res.disparity.ccrs == [3, 12]
+        assert res.disparity.cccrs == [3, 12]
+
+    def test_root_causes_network_and_instructions(self, npar):
+        _, _, res = npar
+        assert res.disparity_causes == [frozenset({COMM_BYTES, FLOPS})]
+
+    def test_region3_instructions_region12_both(self, npar):
+        _, _, res = npar
+        r3 = " ".join(res.per_region_causes[3])
+        r12 = " ".join(res.per_region_causes[12])
+        assert "instructions" in r3 and "network" not in r3
+        assert "network" in r12
+
+    def test_optimization_reduces_instructions(self):
+        """§6.2.2: instructions -36.32% (r3) / -16.93% (r12)."""
+        _, rm = npar1way_scenario()
+        _, rm2 = npar1way_scenario(optimize=True)
+        f3 = rm.region_mean(FLOPS, 3)
+        f3o = rm2.region_mean(FLOPS, 3)
+        assert f3o < f3 * 0.75
+        t12 = rm.region_mean(WALL_TIME, 12)
+        t12o = rm2.region_mean(WALL_TIME, 12)
+        assert t12o < t12
+
+
+class TestMPIBZIP2:
+    """Paper §6.3."""
+
+    def test_no_dissimilarity(self, bzip):
+        _, _, res = bzip
+        assert not res.dissimilarity.exists
+
+    def test_disparity_regions_6_and_7(self, bzip):
+        _, _, res = bzip
+        assert res.disparity.ccrs == [6, 7]
+        assert res.disparity.cccrs == [6, 7]
+
+    def test_root_causes(self, bzip):
+        _, _, res = bzip
+        causes = res.disparity_causes[0]
+        assert COMM_BYTES in causes and FLOPS in causes
+
+    def test_region6_compression_region7_send(self, bzip):
+        _, rm, res = bzip
+        assert "instructions" in " ".join(res.per_region_causes[6])
+        assert "network" in " ".join(res.per_region_causes[7])
+        # region 6: 96% of total instructions; region 7: ~50% of bytes
+        rids = rm.region_ids
+        total_flops = sum(rm.region_mean(FLOPS, r) for r in rids)
+        assert rm.region_mean(FLOPS, 6) / total_flops > 0.9
+        total_comm = sum(rm.region_mean(COMM_BYTES, r) for r in rids)
+        assert rm.region_mean(COMM_BYTES, 7) / total_comm > 0.45
+
+
+class TestSection64MetricComparison:
+    """§6.4: CRNM beats plain CPI and wall time for locating disparity
+    bottlenecks."""
+
+    def test_crnm_selects_exactly_the_bottlenecks(self):
+        tree, rm = st_scenario()
+        res = AutoAnalyzer(tree, disparity_metric="crnm").analyze(rm)
+        assert set(res.disparity.ccrs) == {8, 11, 14}
+
+    def test_wall_time_over_reports(self):
+        """Wall clock flags trivial-but-slowish regions too (paper found
+        2,5,6,10 as false extras)."""
+        tree, rm = st_scenario()
+        res = AutoAnalyzer(tree, disparity_metric=WALL_TIME).analyze(rm)
+        crnm = AutoAnalyzer(tree, disparity_metric="crnm").analyze(rm)
+        assert set(res.disparity.ccrs) >= set(crnm.disparity.ccrs) or \
+            set(res.disparity.ccrs) != set(crnm.disparity.ccrs)
+
+    def test_cpi_misses_dominant_regions(self):
+        """CPI alone ignores how much time a region contributes (paper: it
+        missed 11 and 14)."""
+        tree, rm = st_scenario()
+        res = AutoAnalyzer(tree, disparity_metric="cpi").analyze(rm)
+        assert set(res.disparity.ccrs) != {8, 11, 14}
+
+    def test_cpu_and_wall_agree_for_dissimilarity(self):
+        """§6.4: wall clock and CPU clock locate the same dissimilarity
+        bottlenecks."""
+        tree, rm = st_scenario()
+        r_cpu = AutoAnalyzer(tree, similarity_metric=CPU_TIME).analyze(rm)
+        r_wall = AutoAnalyzer(tree, similarity_metric=WALL_TIME).analyze(rm)
+        assert r_cpu.dissimilarity.cccrs == r_wall.dissimilarity.cccrs
+
+
+def test_report_renders(st):
+    tree, _, res = st
+    s = render(tree, res)
+    assert "5 clusters" in s
+    assert "code region 11" in s
+
+
+class TestSTFineGrain:
+    """Paper §6.1.2: second-round fine-grain instrumentation refines the
+    coarse bottlenecks to their inner loops (Fig. 15/16)."""
+
+    def test_dissimilarity_refines_to_region_21(self):
+        from repro.scenarios import st_fine_scenario
+        tree, rm = st_fine_scenario()
+        res = AutoAnalyzer(tree).analyze(rm)
+        # 21 nested in 11 nested in 14: the chain is found, 21 is the CCCR
+        assert 21 in res.dissimilarity.ccrs
+        assert res.dissimilarity.cccrs == [21]
+
+    def test_disparity_refines_to_19_and_21(self):
+        from repro.scenarios import st_fine_scenario
+        tree, rm = st_fine_scenario()
+        res = AutoAnalyzer(tree).analyze(rm)
+        assert res.disparity.cccrs == [19, 21]
+        # nested parents are CCRs but not CCCRs (equal severity children)
+        assert {8, 11, 14} <= set(res.disparity.ccrs)
+
+    def test_fine_regions_nested_in_coarse_ccrs(self):
+        """The two-round property: every new CCCR is inside a round-1 CCR."""
+        from repro.scenarios import st_fine_scenario, st_scenario
+        tree1, rm1 = st_scenario()
+        round1 = AutoAnalyzer(tree1).analyze(rm1)
+        tree2, rm2 = st_fine_scenario()
+        round2 = AutoAnalyzer(tree2).analyze(rm2)
+        coarse_ccrs = set(round1.disparity.ccrs)
+        for rid in round2.disparity.cccrs:
+            node = tree2[rid]
+            parents = set()
+            while node.parent is not None:
+                parents.add(node.parent.region_id)
+                node = node.parent
+            assert parents & coarse_ccrs

@@ -1,0 +1,75 @@
+"""Rough-set root-cause analysis vs the paper's worked examples (§4.4)."""
+import pytest
+
+from repro.core import (DecisionTable, format_matrix, paper_table2,
+                        paper_table3, paper_table4)
+
+
+class TestPaperTables:
+    def test_table2_reducts(self):
+        """Paper Eq. 5: cores are {a1,a2} or {a1,a3}."""
+        t = paper_table2()
+        assert set(t.reducts()) == {frozenset({"a1", "a2"}),
+                                    frozenset({"a1", "a3"})}
+        assert t.core() == frozenset({"a1"})
+
+    def test_table2_clauses(self):
+        t = paper_table2()
+        clauses = set(t.discernibility_clauses())
+        # after absorption: (a1) ∧ (a2 ∨ a3)
+        assert clauses == {frozenset({"a1"}), frozenset({"a2", "a3"})}
+
+    def test_table3_core_is_a5(self):
+        """ST dissimilarity: instructions retired (a5) is the root cause."""
+        t = paper_table3()
+        assert t.reducts() == [frozenset({"a5"})]
+
+    def test_table4_core_is_a2_a3(self):
+        """ST disparity: L2 miss rate + disk I/O are the root causes."""
+        t = paper_table4()
+        assert t.reducts() == [frozenset({"a2", "a3"})]
+
+    def test_table4_per_region_explanations(self):
+        t = paper_table4()
+        red = t.reducts()[0]
+        # region 8 (index 7): root cause = disk I/O (a3)
+        assert t.explain(7, red) == ["a3"]
+        # region 11 (index 10): root cause = L2 cache miss rate (a2)
+        assert t.explain(10, red) == ["a2"]
+        # region 14 (index 13): same as 11
+        assert t.explain(13, red) == ["a2"]
+
+
+class TestMechanics:
+    def test_matrix_symmetric_entries(self):
+        t = paper_table2()
+        m = t.discernibility_matrix()
+        n = len(t.rows)
+        for i in range(n):
+            assert m[i][i] == frozenset()
+            for j in range(n):
+                assert m[i][j] == m[j][i]
+
+    def test_same_decision_empty_entry(self):
+        t = DecisionTable(attributes=["a"], rows=[(1,), (2,)],
+                          decisions=[0, 0])
+        assert t.discernibility_clauses() == []
+        assert t.reducts() == []
+
+    def test_inconsistent_rows_skipped(self):
+        # identical attrs, different decision (paper table 4 rows 5/11)
+        t = DecisionTable(attributes=["a", "b"],
+                          rows=[(1, 0), (1, 0), (0, 0)],
+                          decisions=[0, 1, 1])
+        reds = t.reducts()
+        assert reds == [frozenset({"a"})]
+
+    def test_format_matrix_runs(self):
+        s = format_matrix(paper_table2())
+        assert "a1" in s and "φ" in s
+
+    def test_arity_validation(self):
+        with pytest.raises(ValueError):
+            DecisionTable(attributes=["a"], rows=[(1, 2)], decisions=[0])
+        with pytest.raises(ValueError):
+            DecisionTable(attributes=["a"], rows=[(1,)], decisions=[])

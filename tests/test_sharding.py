@@ -1,0 +1,87 @@
+"""Sharding-rule engine tests (divisibility fallback, spec building)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.launch.mesh import make_mesh
+from repro.sharding import (PARAM_RULES, activation_sharding, constrain,
+                            rules_for, sharding_for, spec_for,
+                            tree_shardings)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh((1, 1), ("data", "model"))
+
+
+class TestSpecFor:
+    def test_basic_mapping(self, mesh):
+        spec = spec_for((64, 64), ("embed", "mlp"), PARAM_RULES, mesh)
+        assert spec == P("data", "model")
+
+    def test_indivisible_dim_dropped(self, mesh):
+        # 256206 (seamless vocab) is not divisible by any >1 axis, but on a
+        # 1x1 mesh everything divides; simulate with explicit rules check
+        spec = spec_for((7,), ("vocab",), PARAM_RULES, mesh)
+        assert spec in (P("model"), P())
+
+    def test_axis_used_once(self, mesh):
+        spec = spec_for((4, 4), ("mlp", "mlp"), {"mlp": "model"}, mesh)
+        # second occurrence must not reuse the model axis
+        assert spec in (P("model"), P("model", None))
+
+    def test_none_axes_replicated(self, mesh):
+        assert spec_for((3, 3), (None, None), PARAM_RULES, mesh) == P()
+
+    def test_trailing_nones_trimmed(self, mesh):
+        s = spec_for((8, 8, 8), ("embed", None, None), PARAM_RULES, mesh)
+        assert s == P("data")
+
+
+class TestTreeShardings:
+    def test_params_tree(self, mesh):
+        cfg = get_arch("st-100m").smoke
+        from repro.models import build
+        api = build(cfg)
+        params, axes = api.init(jax.random.key(0))
+        sh = tree_shardings(params, axes, rules_for(cfg, param=True), mesh)
+        n_params = len(jax.tree.leaves(params))
+        n_shard = len(jax.tree.leaves(
+            sh, is_leaf=lambda x: hasattr(x, "spec")))
+        assert n_params == n_shard
+
+
+class TestConstrain:
+    def test_noop_without_context(self):
+        x = jnp.ones((4, 4))
+        y = constrain(x, ("batch", None))
+        assert y is x
+
+    def test_applies_inside_context(self, mesh):
+        rules = rules_for(None, param=False) if False else \
+            __import__("repro.sharding.rules", fromlist=["ACT_RULES"]).ACT_RULES
+
+        @jax.jit
+        def f(x):
+            with activation_sharding(mesh, rules):
+                return constrain(x, ("batch", None)) * 2
+
+        out = f(jnp.ones((4, 4)))
+        np.testing.assert_array_equal(np.asarray(out), 2 * np.ones((4, 4)))
+
+    def test_moe_tp_rules_override(self):
+        cfg = get_arch("mixtral-8x22b").full
+        rules = rules_for(cfg, param=True)
+        assert rules["expert"] is None          # tp sharding: experts replicated
+        cfg2 = get_arch("deepseek-v2-lite-16b").full
+        rules2 = rules_for(cfg2, param=True)
+        assert rules2["expert"] == "model"      # ep sharding
+
+    def test_seq_sharded_rules(self):
+        cfg = get_arch("rwkv6-3b").full
+        r = rules_for(cfg, param=False, seq_sharded=True)
+        assert r["seq"] == "data"
+        assert r["batch"] is None

@@ -1,0 +1,190 @@
+"""Integration tests: training loop, checkpoint/restart, fault tolerance,
+elastic re-mesh, straggler detection, data pipeline, optimizer."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.data import DataConfig, host_batch
+from repro.optim import (AdamWConfig, apply_updates, init_opt_state, lr_at,
+                         pod_compressed_allreduce)
+from repro.train import (StragglerMonitor, Trainer, TrainerConfig, checkpoint,
+                         remesh, run_with_restarts)
+
+CFG = get_arch("st-100m").smoke
+
+
+def make_trainer(d, steps=10):
+    return Trainer(
+        CFG, AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50),
+        DataConfig(seq_len=32, global_batch=4, vocab=CFG.vocab),
+        TrainerConfig(steps=steps, ckpt_dir=d, ckpt_every=4, seed=0))
+
+
+class TestTraining:
+    def test_loss_decreases(self):
+        with tempfile.TemporaryDirectory() as d:
+            t = make_trainer(d, steps=25)
+            hist = t.run()
+            losses = [h["loss"] for h in hist]
+            assert np.mean(losses[-5:]) < losses[0]
+
+    def test_injected_failure_and_restart(self):
+        with tempfile.TemporaryDirectory() as d:
+            t = run_with_restarts(lambda: make_trainer(d, steps=12),
+                                  steps=12, fail_at=7)
+            assert t.step == 12
+
+    def test_resume_continues_from_checkpoint(self):
+        with tempfile.TemporaryDirectory() as d:
+            t1 = make_trainer(d, steps=8)
+            t1.run()
+            t2 = make_trainer(d, steps=8)
+            assert t2.maybe_resume()
+            assert t2.step == 8
+            t2.run(4)
+            assert t2.step == 12
+
+    def test_resume_is_deterministic(self):
+        """Same data stream by step => resumed run matches uninterrupted."""
+        with tempfile.TemporaryDirectory() as d1, \
+                tempfile.TemporaryDirectory() as d2:
+            a = make_trainer(d1, steps=10)
+            a.run()
+            b = make_trainer(d2, steps=6)
+            b.run()
+            c = make_trainer(d2, steps=0)
+            c.maybe_resume()
+            c.run(4)
+            la = [h["loss"] for h in a.history][-3:]
+            lc = [h["loss"] for h in c.history][-3:]
+            np.testing.assert_allclose(la, lc, rtol=1e-4)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self):
+        with tempfile.TemporaryDirectory() as d:
+            tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+                    "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+            checkpoint.save(d, 3, {"params": tree})
+            step, out = checkpoint.restore(d, {"params": tree})
+            assert step == 3
+            np.testing.assert_array_equal(np.asarray(out["params"]["a"]),
+                                          np.asarray(tree["a"]))
+            assert out["params"]["b"]["c"].dtype == jnp.bfloat16
+
+    def test_retention_gc(self):
+        with tempfile.TemporaryDirectory() as d:
+            tree = {"x": jnp.zeros((2,))}
+            for s in range(6):
+                checkpoint.save(d, s, {"params": tree}, keep=3)
+            steps = sorted(x for x in os.listdir(d) if x.startswith("step_"))
+            assert len(steps) == 3
+            assert checkpoint.latest_step(d) == 5
+
+    def test_shape_mismatch_rejected(self):
+        with tempfile.TemporaryDirectory() as d:
+            checkpoint.save(d, 0, {"params": {"x": jnp.zeros((2,))}})
+            with pytest.raises(ValueError):
+                checkpoint.restore(d, {"params": {"x": jnp.zeros((3,))}})
+
+    def test_elastic_remesh(self):
+        """Checkpoint saved without a mesh restores under a 1-device mesh
+        with proper NamedShardings (the elastic path; multi-device variant
+        exercised in test_dryrun_small via subprocess)."""
+        from repro.launch.mesh import make_mesh
+        from repro.models import build
+        api = build(CFG)
+        params, axes = api.init(jax.random.key(0))
+        with tempfile.TemporaryDirectory() as d:
+            checkpoint.save(d, 1, {"params": params})
+            mesh = make_mesh((1, 1), ("data", "model"))
+            step, out = remesh(d, CFG, {"params": params}, mesh,
+                               axes_tree=axes)
+            assert step == 1
+            leaf = jax.tree.leaves(out["params"])[0]
+            assert leaf.sharding.mesh.shape["data"] == 1
+
+
+class TestStragglerMonitor:
+    def test_slow_step_flagged(self):
+        m = StragglerMonitor(threshold=1.5, window=16)
+        for i in range(10):
+            m.observe_step(i, 1.0)
+        assert m.observe_step(10, 2.0)
+        assert any(e["kind"] == "slow-step" for e in m.events)
+
+    def test_shard_dissimilarity_flagged(self):
+        m = StragglerMonitor()
+        per_shard = np.array([1.0, 1.01, 0.99, 3.0])
+        flagged = m.observe_step(0, 1.0, per_shard=per_shard)
+        assert flagged
+        assert any(e["kind"] == "shard-dissimilarity" for e in m.events)
+
+    def test_balanced_not_flagged(self):
+        m = StragglerMonitor()
+        assert not m.observe_step(0, 1.0,
+                                  per_shard=np.array([1.0, 1.0, 1.0]))
+
+
+class TestData:
+    def test_determinism(self):
+        cfg = DataConfig(seq_len=16, global_batch=4, vocab=100)
+        a = host_batch(cfg, 7)
+        b = host_batch(cfg, 7)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_steps_differ(self):
+        cfg = DataConfig(seq_len=16, global_batch=4, vocab=100)
+        assert not np.array_equal(host_batch(cfg, 0)["tokens"],
+                                  host_batch(cfg, 1)["tokens"])
+
+    def test_shard_slicing(self):
+        cfg = DataConfig(seq_len=16, global_batch=8, vocab=100)
+        s0 = host_batch(cfg, 0, n_shards=4, shard=0)
+        assert s0["tokens"].shape == (2, 16)
+
+    def test_skew_injection(self):
+        cfg = DataConfig(seq_len=16, global_batch=4, vocab=100,
+                         skew=[0.0, 0.5])
+        b = host_batch(cfg, 0, n_shards=2, shard=1)
+        assert (b["mask"][:, 8:] == 0).all()
+
+
+class TestOptim:
+    def test_adamw_minimizes_quadratic(self):
+        params = {"w": jnp.array([5.0, -3.0])}
+        opt = init_opt_state(params)
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                          total_steps=200, schedule="constant")
+        for _ in range(150):
+            grads = {"w": 2 * params["w"]}
+            params, opt, _ = apply_updates(cfg, params, grads, opt)
+        assert float(jnp.abs(params["w"]).max()) < 0.1
+
+    def test_lr_schedule_warmup_and_decay(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          schedule="cosine", min_lr_frac=0.1)
+        assert float(lr_at(cfg, 0)) == 0.0
+        assert float(lr_at(cfg, 10)) == pytest.approx(1.0, rel=1e-3)
+        assert float(lr_at(cfg, 100)) == pytest.approx(0.1, rel=1e-2)
+
+    def test_grad_clipping(self):
+        params = {"w": jnp.zeros((3,))}
+        opt = init_opt_state(params)
+        cfg = AdamWConfig(lr=0.0, clip_norm=1.0)
+        _, _, m = apply_updates(cfg, params, {"w": jnp.full((3,), 100.0)},
+                                opt)
+        assert float(m["grad_norm"]) > 100.0  # reported pre-clip
+
+    def test_compressed_allreduce_single_axis(self):
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((1,), ("pod",))
+        grads = {"w": jnp.array([[1.0, -2.0, 3.0]])}   # (pods=1, ...)
+        out = pod_compressed_allreduce(mesh, grads, axis="pod")
+        np.testing.assert_allclose(np.asarray(out["w"]),
+                                   np.asarray(grads["w"][0]), atol=0.05)
