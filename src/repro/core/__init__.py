@@ -9,7 +9,8 @@ Public API:
   AutoAnalyzer                   — end-to-end orchestration
   collectors                     — runtime / static / synthetic backends
 """
-from .analyzer import ATTRIBUTE_MEANING, AnalysisResult, AutoAnalyzer
+from .analyzer import (ATTRIBUTE_MEANING, AnalysisResult, AutoAnalyzer,
+                       Verdict)
 from .clustering import (HIGH, LOW, MEDIUM, SEVERITY_NAMES, VERY_HIGH,
                          VERY_LOW, ClusterResult, dissimilarity_severity,
                          is_similar, kmeans_1d, kmeans_severity,

@@ -10,11 +10,12 @@ Pipeline per analysis:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, FrozenSet, List, Optional, Sequence
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .clustering import HIGH, MEDIUM, kmeans_severity, optics_cluster
+from .clustering import (HIGH, MEDIUM, ClusterResult, kmeans_severity,
+                         optics_cluster)
 from .metrics import (COMM_BYTES, CPU_TIME, DECISION_ATTRIBUTES, FLOPS,
                       HBM_INTENSITY, HOST_BYTES, VMEM_PRESSURE, WALL_TIME,
                       RegionMetrics)
@@ -35,6 +36,29 @@ ATTRIBUTE_MEANING = {
 }
 
 
+@dataclasses.dataclass(frozen=True)
+class Verdict:
+    """Machine-checkable summary of one analysis.
+
+    All members are region *paths* (``tree.by_path`` form) and raw metric
+    names, so a verdict can be compared directly against a fault-corpus
+    entry's ground truth (scenarios/corpus.py) — and two verdicts compare
+    equal iff the analyses located the same bottlenecks for the same
+    reasons (used by the determinism tests).
+    """
+
+    dissimilar: bool
+    dissimilarity_paths: Tuple[str, ...]        # CCCRs (innermost culprits)
+    dissimilarity_ccr_paths: Tuple[str, ...]
+    disparity_paths: Tuple[str, ...]            # CCCRs
+    disparity_ccr_paths: Tuple[str, ...]
+    cause_attributes: FrozenSet[str]            # raw metric names (a1..a5)
+    # dissimilarity root causes are global (the Fig. 4 table is per-process,
+    # not per-region); disparity causes are per bottleneck region:
+    dissimilarity_cause_attributes: FrozenSet[str]
+    per_path_causes: Tuple[Tuple[str, Tuple[str, ...]], ...]
+
+
 @dataclasses.dataclass
 class AnalysisResult:
     dissimilarity: DissimilarityReport
@@ -43,8 +67,17 @@ class AnalysisResult:
     disparity_table: Optional[DecisionTable]
     dissimilarity_causes: List[FrozenSet[str]]
     disparity_causes: List[FrozenSet[str]]
-    per_region_causes: Dict[int, List[str]]
     metric_used: str = CPU_TIME
+    # raw attribute names per disparity CCR
+    per_region_attributes: Dict[int, List[str]] = \
+        dataclasses.field(default_factory=dict)
+    verdict: Optional[Verdict] = None
+
+    @property
+    def per_region_causes(self) -> Dict[int, List[str]]:
+        """Human-readable meanings of :attr:`per_region_attributes`."""
+        return {rid: [ATTRIBUTE_MEANING.get(a, a) for a in attrs]
+                for rid, attrs in self.per_region_attributes.items()}
 
     def has_bottlenecks(self) -> bool:
         return self.dissimilarity.exists or bool(self.disparity.ccrs)
@@ -58,12 +91,20 @@ class AutoAnalyzer:
                  similarity_metric: str = CPU_TIME,
                  disparity_metric: str = "crnm",
                  attributes: Sequence[str] = tuple(DECISION_ATTRIBUTES),
-                 peak_flops_per_s: Optional[float] = None):
+                 peak_flops_per_s: Optional[float] = None,
+                 threshold_frac: float = 0.10):
         self.tree = tree
         self.similarity_metric = similarity_metric
         self.disparity_metric = disparity_metric
         self.attributes = list(attributes)
         self.peak = peak_flops_per_s
+        # OPTICS neighbourhood radius as a fraction of the seed vector's
+        # norm; the paper's 10% suits low-noise collection, runtime
+        # (wall-clock) collection wants a wider band.
+        self.threshold_frac = threshold_frac
+
+    def _cluster(self, vectors) -> ClusterResult:
+        return optics_cluster(vectors, threshold_frac=self.threshold_frac)
 
     # -- passes -----------------------------------------------------------
     def analyze(self, rm: RegionMetrics) -> AnalysisResult:
@@ -79,7 +120,7 @@ class AutoAnalyzer:
         # Root causes: per-bottleneck discernibility functions (the paper
         # 'searches the decision table' per region) — the union of each
         # bottleneck's minimal hitting attributes with a positive value.
-        per_region: Dict[int, List[str]] = {}
+        per_region_attrs: Dict[int, List[str]] = {}
         union: set = set()
         for rid in disp.ccrs:
             idx = disp_table.object_ids.index(rid)
@@ -88,18 +129,52 @@ class AutoAnalyzer:
             pos = {a for red in reds for a in red
                    if row[disp_table.attributes.index(a)]}
             union |= pos
-            per_region[rid] = [ATTRIBUTE_MEANING.get(a, a)
-                               for a in sorted(pos)]
+            per_region_attrs[rid] = sorted(pos)
         disp_causes = [frozenset(union)] if union else []
-        return AnalysisResult(
+        result = AnalysisResult(
             dissimilarity=dis,
             disparity=disp,
             dissimilarity_table=dis_table,
             disparity_table=disp_table,
             dissimilarity_causes=dis_causes or [],
             disparity_causes=disp_causes,
-            per_region_causes=per_region,
             metric_used=self.similarity_metric,
+            per_region_attributes=per_region_attrs,
+        )
+        result.verdict = self._verdict(result)
+        return result
+
+    def analyze_collector(self, collector) -> AnalysisResult:
+        """Run the pipeline against an injected collector — anything with a
+        ``collect() -> RegionMetrics`` method (synthetic fault backends,
+        TimedRegionRunner wrappers, replayed traces)."""
+        return self.analyze(collector.collect())
+
+    def _paths(self, rids: Sequence[int]) -> Tuple[str, ...]:
+        out = []
+        for rid in rids:
+            try:
+                out.append(self.tree[rid].path)
+            except KeyError:
+                out.append(str(rid))
+        return tuple(sorted(out))
+
+    def _verdict(self, res: AnalysisResult) -> Verdict:
+        dis_attrs = {a for red in res.dissimilarity_causes for a in red}
+        disp_attrs = {a for attrs in res.per_region_attributes.values()
+                      for a in attrs}
+        per_path = tuple(sorted(
+            (self._paths([rid])[0], tuple(attrs))
+            for rid, attrs in res.per_region_attributes.items()))
+        return Verdict(
+            dissimilar=res.dissimilarity.exists,
+            dissimilarity_paths=self._paths(res.dissimilarity.cccrs),
+            dissimilarity_ccr_paths=self._paths(res.dissimilarity.ccrs),
+            disparity_paths=self._paths(res.disparity.cccrs),
+            disparity_ccr_paths=self._paths(res.disparity.ccrs),
+            cause_attributes=frozenset(dis_attrs | disp_attrs),
+            dissimilarity_cause_attributes=frozenset(dis_attrs),
+            per_path_causes=per_path,
         )
 
     def _is_management(self, rid: int) -> bool:
@@ -111,7 +186,8 @@ class AutoAnalyzer:
     def _dissimilarity_pass(self, rm: RegionMetrics,
                             rids: List[int]) -> DissimilarityReport:
         T = rm.vectors(self.similarity_metric, rids)
-        return find_dissimilarity_bottlenecks(self.tree, T, rids)
+        return find_dissimilarity_bottlenecks(self.tree, T, rids,
+                                              cluster_fn=self._cluster)
 
     def _disparity_values(self, rm: RegionMetrics,
                           rids: List[int]) -> np.ndarray:
@@ -135,11 +211,11 @@ class AutoAnalyzer:
         """Fig. 4: per-process rows; attribute value = cluster id of the
         process under that metric's per-region vectors; decision = cluster
         id under the main (CPU time) metric."""
-        decision = optics_cluster(rm.vectors(self.similarity_metric, rids))
+        decision = self._cluster(rm.vectors(self.similarity_metric, rids))
         rows = []
         per_attr_labels = []
         for a in self.attributes:
-            labels = optics_cluster(rm.vectors(a, rids)).labels
+            labels = self._cluster(rm.vectors(a, rids)).labels
             per_attr_labels.append(labels)
         m = rm.n_processes
         for i in range(m):

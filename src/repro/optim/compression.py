@@ -14,7 +14,28 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+try:  # newer jax exposes shard_map at top level
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+import inspect
+
+# The replication-check kwarg was renamed check_rep -> check_vma across jax
+# releases; pick whichever this jax understands.
+_CHECK_KWARG = ("check_vma"
+                if "check_vma" in inspect.signature(_shard_map).parameters
+                else "check_rep")
+
+
+def shard_map(f, *args, **kwargs):
+    if "check_vma" in kwargs and "check_rep" in kwargs:
+        raise TypeError("pass only one of check_vma / check_rep")
+    for alias in ("check_vma", "check_rep"):
+        if alias in kwargs and alias != _CHECK_KWARG:
+            kwargs[_CHECK_KWARG] = kwargs.pop(alias)
+    return _shard_map(f, *args, **kwargs)
 
 
 def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:

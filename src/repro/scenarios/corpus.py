@@ -1,0 +1,579 @@
+"""Golden fault-injection corpus: named scenarios with machine-checkable
+ground truth, pipelined end-to-end through :class:`AutoAnalyzer`.
+
+Each :class:`CorpusEntry` pairs a *builder* (seed -> (tree, collector)) with
+a :class:`GroundTruth` (which region paths the analysis must locate, which
+decision attributes must surface as causes, and whether the planted
+bottleneck is a dissimilarity or a disparity).  The registry spans the
+paper's three applications (ST, NPAR1WAY, MPIBZIP2) plus MoE and dense
+transformer trees derived from ``repro.configs`` smoke models, over both
+backends:
+
+* ``synthetic`` — clean balanced baseline behaviours through
+  :class:`SyntheticWorkload`, then deterministic fault perturbation
+  (scenarios/faults.py).  Bit-reproducible given the seed.
+* ``runtime``  — real jitted execution through
+  :class:`TimedRegionRunner`, with designated shards running genuinely
+  more work via :func:`faults.iterated_work`.
+
+``evaluate_corpus`` scores every entry (precision/recall of located paths,
+cause recall) and backs both tests/test_fault_corpus.py and
+scripts/run_corpus.py — the paper's validation experiment as a permanent
+regression gate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, FrozenSet, List, Optional, Tuple
+
+from repro.core import (COMM_BYTES, FLOPS, HBM_INTENSITY, HOST_BYTES,
+                        VMEM_PRESSURE, WALL_TIME, AutoAnalyzer,
+                        RegionBehavior, RegionMetrics, RegionTree,
+                        SyntheticWorkload, TimedRegionRunner, Verdict,
+                        st_region_tree)
+
+from . import faults as F
+
+N_PROCESSES = 8
+
+
+# -- ground truth and registry -------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GroundTruth:
+    """What a corpus entry plants, in verdict-comparable terms."""
+
+    kind: str                               # dissimilarity | disparity | both
+    bottleneck_paths: FrozenSet[str]
+    cause_attributes: FrozenSet[str] = frozenset()
+
+
+@dataclasses.dataclass(frozen=True)
+class CorpusEntry:
+    name: str
+    app: str                                # st | npar1way | mpibzip2 | moe | transformer | runtime
+    backend: str                            # synthetic | runtime
+    description: str
+    build: Callable[[int], Tuple[RegionTree, Any]]
+    truth: GroundTruth
+    analyzer_kw: Tuple[Tuple[str, Any], ...] = ()
+    min_precision: float = 0.34
+
+
+CORPUS: Dict[str, CorpusEntry] = {}
+
+
+def register_entry(entry: CorpusEntry) -> CorpusEntry:
+    if entry.name in CORPUS:
+        raise ValueError(f"duplicate corpus entry {entry.name!r}")
+    CORPUS[entry.name] = entry
+    return entry
+
+
+def corpus_entries(backend: Optional[str] = None,
+                   app: Optional[str] = None) -> List[CorpusEntry]:
+    out = [e for e in CORPUS.values()
+           if (backend is None or e.backend == backend)
+           and (app is None or e.app == app)]
+    return sorted(out, key=lambda e: e.name)
+
+
+# -- collectors -----------------------------------------------------------
+
+class FaultedSyntheticCollector:
+    """Synthetic backend: balanced baseline behaviours + fault injection.
+    Deterministic given the seed (measurement jitter and fault rng both
+    derive from it); no device execution."""
+
+    def __init__(self, tree: RegionTree,
+                 behaviors: Dict[int, RegionBehavior],
+                 fault_list: Tuple, seed: int,
+                 n_processes: int = N_PROCESSES):
+        self.tree = tree
+        self.behaviors = behaviors
+        self.faults = fault_list
+        self.seed = seed
+        self.m = n_processes
+
+    def collect(self) -> RegionMetrics:
+        wl = SyntheticWorkload(self.tree, self.behaviors, self.m,
+                               seed=self.seed)
+        return F.inject(self.tree, wl.collect(), self.faults, seed=self.seed)
+
+
+class RuntimeFaultCollector:
+    """Runtime backend: real jitted regions timed by TimedRegionRunner;
+    per-shard iteration counts carry the injected extra work."""
+
+    def __init__(self, tree: RegionTree, size: int,
+                 iters_per_shard: Tuple[int, ...], seed: int,
+                 repeats: int = 5):
+        self.tree = tree
+        self.size = size
+        self.iters = iters_per_shard
+        self.seed = seed
+        self.repeats = repeats
+
+    def collect(self) -> RegionMetrics:
+        import jax
+        import jax.numpy as jnp
+        m = len(self.iters)
+        states = [jax.random.normal(jax.random.key(self.seed * 131 + i),
+                                    (self.size, self.size))
+                  for i in range(m)]
+        data = [(jax.random.normal(jax.random.key(self.seed * 131 + 64 + i),
+                                   (self.size, self.size)),
+                 jnp.int32(self.iters[i])) for i in range(m)]
+        runner = TimedRegionRunner(self.tree, warmup=1,
+                                   repeats=self.repeats)
+        return runner.run(states, data)
+
+
+# -- balanced baseline workloads -----------------------------------------
+
+def _beh(base_time: float, flops_per_s: float = 2e9,
+         vmem: float = 0.02, hbm: float = 0.02, host: float = 1e6,
+         comm: float = 1e7, comm_frac: float = 0.0) -> RegionBehavior:
+    return RegionBehavior(base_time=base_time, imbalance=None,
+                          flops_per_s=flops_per_s, vmem_pressure=vmem,
+                          hbm_intensity=hbm, host_bytes=host,
+                          comm_bytes=comm, comm_time_frac=comm_frac)
+
+
+def baseline_st() -> Tuple[RegionTree, Dict[int, RegionBehavior]]:
+    """The ST region tree with *balanced* behaviours — the paper's
+    application after its fixes, ready for fresh fault injection."""
+    tree = st_region_tree()
+    # Flat enough that no *planted* region is pre-flagged by the relative
+    # severity banding (tests/test_fault_corpus.py asserts this).
+    times = {1: 0.6, 2: 0.9, 3: 0.7, 4: 0.5, 5: 1.0, 6: 0.9, 7: 0.5,
+             8: 0.8, 9: 0.6, 10: 0.7, 13: 0.5, 11: 1.0, 12: 0.6}
+    b = {rid: _beh(t) for rid, t in times.items()}
+    b[14] = _beh(times[11] + times[12] + 0.1)   # inclusive of 11 and 12
+    return tree, b
+
+
+def baseline_npar1way() -> Tuple[RegionTree, Dict[int, RegionBehavior]]:
+    tree = RegionTree("NPAR1WAY")
+    for i in range(1, 13):
+        tree.add(f"cr{i}")
+    # Planted regions (cr3, cr12) sit mid-band: only injection flags them.
+    times = [0.5, 0.9, 0.6, 0.5, 1.0, 0.4, 0.5, 0.8, 0.6, 0.5, 0.7, 0.6]
+    b = {i + 1: _beh(t, comm=1e8, comm_frac=0.05)
+         for i, t in enumerate(times)}
+    return tree, b
+
+
+def baseline_mpibzip2() -> Tuple[RegionTree, Dict[int, RegionBehavior]]:
+    tree = RegionTree("MPIBZIP2")
+    for i in range(1, 17):
+        tree.add(f"cr{i}", management=(i in (1, 2)))
+    # Distinct times with the planted regions (cr6 compressor, cr7 block
+    # send) mid-band — severity banding is relative, so a near-flat profile
+    # would smear noise across all five bands.
+    times = {1: 0.5, 2: 0.5, 3: 0.6, 4: 0.5, 5: 0.9, 6: 0.6, 7: 0.7,
+             8: 0.5, 9: 1.0, 10: 0.6, 11: 0.4, 12: 0.8, 13: 0.6, 14: 0.5,
+             15: 0.9, 16: 0.5}
+    b = {i: _beh(times[i], comm=5e7) for i in range(1, 17)}
+    b[7] = _beh(times[7], comm=2e8, comm_frac=0.2)   # block send
+    return tree, b
+
+
+def model_region_tree(arch: str):
+    """Region tree + balanced behaviours for a ``repro.configs`` smoke
+    model: embed / layer_i {attn, mlp | router + expert_j [+ shared]} /
+    final_norm / head / optimizer, with inclusive layer timing."""
+    from repro.configs import get_arch
+    cfg = get_arch(arch).smoke
+    tree = RegionTree(cfg.name)
+    b: Dict[int, RegionBehavior] = {}
+
+    def leaf(name, parent, t, **kw):
+        r = tree.add(name, parent=parent)
+        b[r.region_id] = _beh(t, **kw)
+        return r
+
+    # Deliberately flat-ish leaf times: the natural spread stays well under
+    # the >=8x stretch a fault injects, so severity banding has headroom.
+    leaf("embed", None, 0.5)
+    # attn and mlp share one band in the clean baseline — only an injected
+    # fault may separate them (the clean-baseline test relies on this).
+    attn_t = 1.0
+    mlp_t = 1.0
+    for L in range(cfg.n_layers):
+        layer = tree.add(f"layer_{L}")
+        total = 0.0
+        leaf("attn", layer, attn_t, hbm=0.03)
+        total += attn_t
+        if cfg.moe is not None:
+            leaf("router", layer, 0.4)
+            total += 0.4
+            per_expert = mlp_t * cfg.moe.top_k / cfg.moe.n_experts + 0.2
+            for e in range(cfg.moe.n_experts):
+                leaf(f"expert_{e}", layer, per_expert)
+                total += per_expert
+            for s in range(cfg.moe.n_shared):
+                leaf(f"shared_expert_{s}", layer, mlp_t * 0.5)
+                total += mlp_t * 0.5
+        else:
+            leaf("mlp", layer, mlp_t)
+            total += mlp_t
+        b[layer.region_id] = _beh(total + 0.05)
+    leaf("final_norm", None, 0.5)
+    leaf("head", None, 0.6)
+    leaf("optimizer", None, 0.5)
+    return tree, b, cfg
+
+
+# -- entry builders -------------------------------------------------------
+
+def _synthetic(baseline: Callable, *fault_list):
+    def build(seed: int):
+        tree, behaviors = baseline()
+        return tree, FaultedSyntheticCollector(tree, behaviors,
+                                               tuple(fault_list), seed)
+    return build
+
+
+def _model_synthetic(arch: str, *fault_list):
+    def build(seed: int):
+        tree, behaviors, _ = model_region_tree(arch)
+        return tree, FaultedSyntheticCollector(tree, behaviors,
+                                               tuple(fault_list), seed)
+    return build
+
+
+def _runtime(iters_per_shard: Tuple[int, ...], size: int = 96):
+    def build(seed: int):
+        import jax.numpy as jnp
+        tree = RegionTree("rt")
+
+        def embed(state, data):
+            return state + data @ data.T * 1e-3
+
+        def solver_body(state, data):
+            return jnp.tanh(state @ state) * 0.5 + state * 0.5
+
+        def reduce_(state, bundle):
+            data, _ = bundle
+            return state + data.sum() * 1e-6
+
+        def embed_w(state, bundle):
+            data, _ = bundle
+            return embed(state, data)
+
+        tree.add("embed", fn=embed_w)
+        tree.add("solver", fn=F.iterated_work(solver_body))
+        tree.add("reduce", fn=reduce_)
+        return tree, RuntimeFaultCollector(tree, size, iters_per_shard, seed)
+    return build
+
+
+# -- scoring --------------------------------------------------------------
+
+@dataclasses.dataclass
+class CorpusRunResult:
+    entry: CorpusEntry
+    verdict: Verdict
+    found: FrozenSet[str]
+    missed: FrozenSet[str]
+    spurious: FrozenSet[str]
+    precision: float
+    recall: float
+    cause_recall: float
+    # causes as scored: location-gated, unlike verdict.cause_attributes
+    causes_found: FrozenSet[str] = frozenset()
+
+    @property
+    def passed(self) -> bool:
+        return (self.recall == 1.0 and self.cause_recall == 1.0
+                and self.precision >= self.entry.min_precision)
+
+
+def _related(a: str, b: str) -> bool:
+    """True when one path is the other or its ancestor/descendant — a
+    nested hit (the paper flags both cr14 and its nested cr11)."""
+    return a == b or a.startswith(b + "/") or b.startswith(a + "/")
+
+
+def score_verdict(entry: CorpusEntry, verdict: Verdict) -> CorpusRunResult:
+    kind = entry.truth.kind
+    found: set = set()
+    if kind in ("dissimilarity", "both"):
+        found |= set(verdict.dissimilarity_paths)
+    if kind in ("disparity", "both"):
+        found |= set(verdict.disparity_paths)
+    expected = set(entry.truth.bottleneck_paths)
+    # Recall demands the *exact* planted path: reporting only an ancestor
+    # is a miss (the paper's search descends to the nested culprit).
+    # Precision is forgiving of the enclosing CCR chain via _related below.
+    hit = {p for p in expected if p in found}
+    missed = expected - hit
+    spurious = {p for p in found
+                if not any(_related(p, e) for e in expected)}
+    precision = (len(found - spurious) / len(found)) if found else 0.0
+    recall = len(hit) / len(expected) if expected else 1.0
+    # Causes must be recovered *where they were planted*: disparity causes
+    # count only when attributed to an expected region (or its nested
+    # chain); dissimilarity causes are global by construction (the Fig. 4
+    # decision table is per-process, not per-region).
+    got_causes: set = set()
+    if kind in ("dissimilarity", "both"):
+        got_causes |= set(verdict.dissimilarity_cause_attributes)
+    if kind in ("disparity", "both"):
+        for path, attrs in verdict.per_path_causes:
+            if any(_related(path, e) for e in expected):
+                got_causes |= set(attrs)
+    want_causes = entry.truth.cause_attributes
+    cause_recall = (len(want_causes & got_causes)
+                    / len(want_causes)) if want_causes else 1.0
+    return CorpusRunResult(entry=entry, verdict=verdict,
+                           found=frozenset(found), missed=frozenset(missed),
+                           spurious=frozenset(spurious),
+                           precision=precision, recall=recall,
+                           cause_recall=cause_recall,
+                           causes_found=frozenset(got_causes))
+
+
+def run_entry(entry: CorpusEntry, seed: int = 0) -> CorpusRunResult:
+    """Build the scenario and pipe it end-to-end through AutoAnalyzer."""
+    tree, collector = entry.build(seed)
+    analyzer = AutoAnalyzer(tree, **dict(entry.analyzer_kw))
+    result = analyzer.analyze_collector(collector)
+    return score_verdict(entry, result.verdict)
+
+
+def run_entry_robust(entry: CorpusEntry, seed: int = 0) -> CorpusRunResult:
+    """run_entry, with one fresh collection for runtime entries that fail:
+    wall-clock collection on a loaded host can lose a measurement to a
+    pathological scheduler burst.  The better of the two results is kept.
+    Synthetic entries never retry — they are deterministic, so a failure
+    is a real regression."""
+    r = run_entry(entry, seed=seed)
+    if entry.backend == "runtime" and not r.passed:
+        r2 = run_entry(entry, seed=seed + 1)
+        if (r2.passed, r2.recall, r2.precision) >= \
+                (r.passed, r.recall, r.precision):
+            r = r2
+    return r
+
+
+def select_entries(backend: Optional[str] = None,
+                   names: Optional[List[str]] = None) -> List[CorpusEntry]:
+    """Resolve a backend/name selection, rejecting contradictions.
+
+    Naming an entry that doesn't exist — or that the backend filter
+    excludes — is an error, not an empty selection: a CI gate must never
+    silently run zero checks."""
+    if names is None:
+        return corpus_entries(backend=backend)
+    unknown = [n for n in names if n not in CORPUS]
+    if unknown:
+        raise ValueError(f"unknown entries {unknown}; known: "
+                         f"{sorted(CORPUS)}")
+    entries = [CORPUS[n] for n in names]
+    conflicts = [e.name for e in entries
+                 if backend is not None and e.backend != backend]
+    if conflicts:
+        raise ValueError(
+            f"entries {conflicts} are not in backend {backend!r}")
+    return entries
+
+
+def evaluate_corpus(seed: int = 0, backend: Optional[str] = None,
+                    names: Optional[List[str]] = None) -> List[CorpusRunResult]:
+    """Run entries (all, by backend, or by name) with runtime-retry."""
+    return [run_entry_robust(e, seed=seed)
+            for e in select_entries(backend=backend, names=names)]
+
+
+# -- the registry ---------------------------------------------------------
+
+# The ST Fig. 11 five-group shape, normalised around 1.
+_ST_SKEW = (0.3, 0.8, 0.81, 1.2, 1.6, 2.0, 1.61, 2.01)
+
+register_entry(CorpusEntry(
+    name="st/compute-straggler-cr5",
+    app="st", backend="synthetic",
+    description="One ST rank does 5x the solver work in cr5",
+    build=_synthetic(baseline_st,
+                     F.ComputeStraggler("ST/cr5", procs=(6,), factor=5.0)),
+    truth=GroundTruth("dissimilarity", frozenset({"ST/cr5"}),
+                      frozenset({FLOPS})),
+))
+
+register_entry(CorpusEntry(
+    name="st/data-skew-cr11",
+    app="st", backend="synthetic",
+    description="ST Fig.11 five-group work skew on nested cr11",
+    build=_synthetic(baseline_st,
+                     F.DataSkew("ST/cr14/cr11", profile=_ST_SKEW)),
+    truth=GroundTruth("dissimilarity", frozenset({"ST/cr14/cr11"}),
+                      frozenset({FLOPS})),
+))
+
+register_entry(CorpusEntry(
+    name="st/io-hotspot-cr8",
+    app="st", backend="synthetic",
+    description="ST cr8 goes disk-I/O bound (the paper's 106GB writes)",
+    build=_synthetic(baseline_st,
+                     F.IOHotspot("ST/cr8", extra_bytes=100e9, slowdown=6.0)),
+    truth=GroundTruth("disparity", frozenset({"ST/cr8"}),
+                      frozenset({HOST_BYTES})),
+))
+
+register_entry(CorpusEntry(
+    name="st/cache-thrash-cr11",
+    app="st", backend="synthetic",
+    description="ST cr11 L2-pressure analogue: HBM traffic inflates 10x",
+    build=_synthetic(baseline_st,
+                     F.CacheThrash("ST/cr14/cr11", slowdown=5.0,
+                                   byte_factor=10.0)),
+    truth=GroundTruth("disparity", frozenset({"ST/cr14/cr11"}),
+                      frozenset({HBM_INTENSITY})),
+))
+
+register_entry(CorpusEntry(
+    name="st/memory-pressure-cr9",
+    app="st", backend="synthetic",
+    description="ST cr9 working set spills: VMEM pressure jumps, 5x slower",
+    build=_synthetic(baseline_st,
+                     F.MemoryPressure("ST/cr9", pressure=0.45, slowdown=5.0)),
+    truth=GroundTruth("disparity", frozenset({"ST/cr9"}),
+                      frozenset({VMEM_PRESSURE})),
+))
+
+register_entry(CorpusEntry(
+    name="st/combined-straggler-io",
+    app="st", backend="synthetic",
+    description="Straggler in cr5 AND an I/O hotspot in cr8 at once",
+    build=_synthetic(baseline_st,
+                     F.ComputeStraggler("ST/cr5", procs=(6,), factor=5.0),
+                     F.IOHotspot("ST/cr8", extra_bytes=100e9, slowdown=6.0)),
+    truth=GroundTruth("both", frozenset({"ST/cr5", "ST/cr8"}),
+                      frozenset({FLOPS, HOST_BYTES})),
+))
+
+register_entry(CorpusEntry(
+    name="npar1way/comm-imbalance-cr12",
+    app="npar1way", backend="synthetic",
+    description="Two ranks pay congested-link wire time in cr12 (wall-"
+                "clock dissimilarity, invisible to the CPU clock)",
+    build=_synthetic(baseline_npar1way,
+                     F.CommImbalance("NPAR1WAY/cr12", extra_bytes=30e9,
+                                     procs=(0, 1), bandwidth=1e10)),
+    truth=GroundTruth("dissimilarity", frozenset({"NPAR1WAY/cr12"}),
+                      frozenset({COMM_BYTES})),
+    analyzer_kw=(("similarity_metric", WALL_TIME),),
+))
+
+register_entry(CorpusEntry(
+    name="npar1way/compute-hotspot-cr3",
+    app="npar1way", backend="synthetic",
+    description="NPAR1WAY cr3 instructions-retired disparity (8x work)",
+    build=_synthetic(baseline_npar1way,
+                     F.ComputeHotspot("NPAR1WAY/cr3", factor=8.0)),
+    truth=GroundTruth("disparity", frozenset({"NPAR1WAY/cr3"}),
+                      frozenset({FLOPS})),
+))
+
+register_entry(CorpusEntry(
+    name="mpibzip2/straggler-cr6",
+    app="mpibzip2", backend="synthetic",
+    description="Two worker ranks hit incompressible blocks: 4x compressor "
+                "time in cr6",
+    build=_synthetic(baseline_mpibzip2,
+                     F.ComputeStraggler("MPIBZIP2/cr6", procs=(2, 5),
+                                        factor=4.0)),
+    truth=GroundTruth("dissimilarity", frozenset({"MPIBZIP2/cr6"}),
+                      frozenset({FLOPS})),
+))
+
+register_entry(CorpusEntry(
+    name="mpibzip2/comm-hotspot-cr7",
+    app="mpibzip2", backend="synthetic",
+    description="MPIBZIP2 cr7 block send saturates the wire on every rank",
+    build=_synthetic(baseline_mpibzip2,
+                     F.CommImbalance("MPIBZIP2/cr7", extra_bytes=20e9,
+                                     procs=None, bandwidth=2e9)),
+    truth=GroundTruth("disparity", frozenset({"MPIBZIP2/cr7"}),
+                      frozenset({COMM_BYTES})),
+))
+
+register_entry(CorpusEntry(
+    name="moe/mixtral-expert-hotspot",
+    app="moe", backend="synthetic",
+    description="Routing collapse: every shard over-routes to expert 0 of "
+                "mixtral-smoke layer 1",
+    build=_model_synthetic("mixtral-8x22b",
+                           F.ExpertLoadImbalance("mixtral-smoke/layer_1",
+                                                 hot_expert=0, factor=4.0,
+                                                 congestion=4.0)),
+    truth=GroundTruth("disparity",
+                      frozenset({"mixtral-smoke/layer_1/expert_0"}),
+                      frozenset({FLOPS})),
+))
+
+register_entry(CorpusEntry(
+    name="moe/deepseek-expert-skew",
+    app="moe", backend="synthetic",
+    description="Two data shards route hot to expert 2 of dsv2-smoke "
+                "layer 0 (per-shard dissimilarity)",
+    build=_model_synthetic("deepseek-v2-lite-16b",
+                           F.ExpertLoadImbalance("dsv2-smoke/layer_0",
+                                                 hot_expert=2, factor=4.0,
+                                                 procs=(0, 3))),
+    truth=GroundTruth("dissimilarity",
+                      frozenset({"dsv2-smoke/layer_0/expert_2"}),
+                      frozenset({FLOPS})),
+))
+
+register_entry(CorpusEntry(
+    name="transformer/gemma-attn-cache-thrash",
+    app="transformer", backend="synthetic",
+    description="gemma-smoke layer 0 attention starts thrashing HBM",
+    build=_model_synthetic("gemma-7b",
+                           F.CacheThrash("gemma-smoke/layer_0/attn",
+                                         slowdown=5.0, byte_factor=10.0)),
+    truth=GroundTruth("disparity",
+                      frozenset({"gemma-smoke/layer_0/attn"}),
+                      frozenset({HBM_INTENSITY})),
+))
+
+register_entry(CorpusEntry(
+    name="transformer/chatglm-jittered-straggler",
+    app="transformer", backend="synthetic",
+    description="One shard straggles ~5x (with jitter) in chatglm3-smoke "
+                "layer 1 mlp",
+    build=_model_synthetic("chatglm3-6b",
+                           F.JitteredStraggler("chatglm3-smoke/layer_1/mlp",
+                                               procs=(5,), factor=5.0,
+                                               jitter=0.2)),
+    truth=GroundTruth("dissimilarity",
+                      frozenset({"chatglm3-smoke/layer_1/mlp"}),
+                      frozenset({FLOPS})),
+))
+
+# Runtime backend: designated shards genuinely execute ~10x the solver
+# iterations.  The wide threshold_frac absorbs scheduler noise on a loaded
+# host; the >=10x injected stretch keeps the straggler unambiguous.
+register_entry(CorpusEntry(
+    name="runtime/compute-straggler",
+    app="runtime", backend="runtime",
+    description="Real jitted run; shard 3 executes ~10x solver iterations",
+    build=_runtime(iters_per_shard=(6, 6, 6, 64)),
+    truth=GroundTruth("dissimilarity", frozenset({"rt/solver"})),
+    analyzer_kw=(("threshold_frac", 0.45),),
+    min_precision=0.2,
+))
+
+register_entry(CorpusEntry(
+    name="runtime/data-skew",
+    app="runtime", backend="runtime",
+    description="Real jitted run; solver iterations skewed 6/6/18/64 "
+                "across shards",
+    build=_runtime(iters_per_shard=(6, 6, 18, 64)),
+    truth=GroundTruth("dissimilarity", frozenset({"rt/solver"})),
+    analyzer_kw=(("threshold_frac", 0.45),),
+    min_precision=0.2,
+))

@@ -1,0 +1,153 @@
+"""The golden fault-injection corpus as a regression harness: every
+registry entry pipelines end-to-end through AutoAnalyzer (collect ->
+cluster -> search -> rough-set causes) and must recover its planted ground
+truth — the paper's §6 validation experiment, made permanent."""
+import pytest
+
+from repro.scenarios import (CORPUS, corpus_entries, run_entry,
+                             run_entry_robust)
+from repro.scenarios import faults as F
+
+SYNTHETIC = [e.name for e in corpus_entries(backend="synthetic")]
+RUNTIME = [e.name for e in corpus_entries(backend="runtime")]
+
+
+def test_registry_shape():
+    """The corpus spans the paper's applications plus the repo's model
+    configs, across both bottleneck kinds and both backends."""
+    assert len(CORPUS) >= 12
+    apps = {e.app for e in CORPUS.values()}
+    assert {"st", "npar1way", "mpibzip2", "moe", "transformer"} <= apps
+    kinds = {e.truth.kind for e in CORPUS.values()}
+    assert {"dissimilarity", "disparity", "both"} <= kinds
+    assert len(SYNTHETIC) >= 12
+    assert RUNTIME  # at least one real-execution entry
+
+
+@pytest.mark.parametrize("name", SYNTHETIC)
+def test_synthetic_entry_recovers_ground_truth(name):
+    r = run_entry(CORPUS[name], seed=0)
+    assert r.recall == 1.0, (
+        f"{name}: missed planted bottlenecks {sorted(r.missed)}; "
+        f"found {sorted(r.found)}")
+    assert r.cause_recall == 1.0, (
+        f"{name}: causes {sorted(r.entry.truth.cause_attributes)} not all "
+        f"recovered at the planted paths; got {sorted(r.causes_found)} "
+        f"(globally: {sorted(r.verdict.cause_attributes)})")
+    assert r.precision >= r.entry.min_precision, (
+        f"{name}: precision {r.precision:.2f} below floor "
+        f"{r.entry.min_precision} (spurious: {sorted(r.spurious)})")
+
+
+@pytest.mark.parametrize("name", SYNTHETIC)
+def test_synthetic_entry_deterministic(name):
+    """Same seed -> bit-identical verdict: the synthetic backend has no
+    wall-clock dependence, so the whole located-bottleneck + root-cause
+    structure must reproduce exactly."""
+    a = run_entry(CORPUS[name], seed=7).verdict
+    b = run_entry(CORPUS[name], seed=7).verdict
+    assert a == b
+
+
+@pytest.mark.parametrize("name", SYNTHETIC)
+def test_synthetic_entry_kind_matches(name):
+    """A dissimilarity entry must actually split the process clustering;
+    a pure disparity entry must not."""
+    entry = CORPUS[name]
+    v = run_entry(entry, seed=0).verdict
+    if entry.truth.kind in ("dissimilarity", "both"):
+        assert v.dissimilar
+    else:
+        assert not v.dissimilar, (
+            f"{name}: balanced scenario produced process clusters "
+            f"{v.dissimilarity_ccr_paths}")
+
+
+@pytest.mark.parametrize("name", RUNTIME)
+def test_runtime_entry_recovers_ground_truth(name):
+    """Real jitted execution: the designated shards genuinely run more
+    iterations and the analysis must still name the culprit region.
+    run_entry_robust re-collects once on a miss — wall-clock collection on
+    a loaded CI host can lose a run to a scheduler burst."""
+    r = run_entry_robust(CORPUS[name], seed=0)
+    assert r.verdict.dissimilar
+    assert r.recall == 1.0, (
+        f"{name}: missed {sorted(r.missed)}; found {sorted(r.found)}")
+
+
+def test_fault_composition_order_independent():
+    """Two independent faults on different regions yield the same verdict
+    regardless of injection order (deltas commute)."""
+    from repro.scenarios.corpus import (FaultedSyntheticCollector,
+                                        baseline_st, score_verdict)
+    from repro.core import AutoAnalyzer
+
+    f1 = F.ComputeStraggler("ST/cr5", procs=(6,), factor=5.0)
+    f2 = F.IOHotspot("ST/cr8", extra_bytes=100e9, slowdown=6.0)
+    verdicts = []
+    for fault_order in ((f1, f2), (f2, f1)):
+        tree, behaviors = baseline_st()
+        coll = FaultedSyntheticCollector(tree, behaviors, fault_order, seed=3)
+        verdicts.append(AutoAnalyzer(tree).analyze_collector(coll).verdict)
+    assert verdicts[0] == verdicts[1]
+
+
+def test_nested_injection_propagates_to_ancestors():
+    """A fault on nested cr11 must be visible in cr14's inclusive timing —
+    otherwise the paper's coarse-first search could never descend to it."""
+    from repro.core import WALL_TIME, SyntheticWorkload
+    from repro.scenarios.corpus import baseline_st
+
+    tree, behaviors = baseline_st()
+    wl = SyntheticWorkload(tree, behaviors, 8, seed=0)
+    rm = wl.collect()
+    before = rm.metric(WALL_TIME).copy()
+    F.inject(tree, rm, [F.ComputeStraggler("ST/cr14/cr11", procs=(2,),
+                                           factor=4.0)], seed=0)
+    after = rm.metric(WALL_TIME)
+    c11, c14 = rm.col(11), rm.col(14)
+    delta11 = after[2, c11] - before[2, c11]
+    delta14 = after[2, c14] - before[2, c14]
+    assert delta11 > 0
+    assert delta14 == pytest.approx(delta11)
+    # untouched processes and regions unchanged
+    assert after[0, c11] == pytest.approx(before[0, c11])
+    assert after[2, rm.col(5)] == pytest.approx(before[2, rm.col(5)])
+
+
+def test_clean_baselines_are_bottleneck_free():
+    """Before injection every baseline is healthy: one process cluster and
+    no planted region flagged — so anything the corpus detects was planted
+    by the fault, not an artefact of the baseline.  (Severity banding is
+    relative, so a clean baseline may still flag its naturally-largest
+    region; what matters is that no *planted* path is pre-flagged.)"""
+    from repro.core import AutoAnalyzer, SyntheticWorkload
+    from repro.scenarios.corpus import (baseline_mpibzip2, baseline_npar1way,
+                                        baseline_st, model_region_tree)
+
+    planted = {}
+    for entry in CORPUS.values():
+        for path in entry.truth.bottleneck_paths:
+            planted.setdefault(path.split("/")[0], set()).add(path)
+
+    def paper_baselines():
+        for baseline in (baseline_st, baseline_npar1way, baseline_mpibzip2):
+            yield baseline.__name__, baseline()
+
+    def model_baselines():
+        for arch in ("mixtral-8x22b", "deepseek-v2-lite-16b", "gemma-7b",
+                     "chatglm3-6b"):
+            tree, behaviors, _ = model_region_tree(arch)
+            yield arch, (tree, behaviors)
+
+    import itertools
+    for name, (tree, behaviors) in itertools.chain(paper_baselines(),
+                                                   model_baselines()):
+        rm = SyntheticWorkload(tree, behaviors, 8, seed=0).collect()
+        res = AutoAnalyzer(tree).analyze(rm)
+        assert not res.dissimilarity.exists, name
+        pre_flagged = planted.get(tree.root.name, set()) & \
+            set(res.verdict.disparity_ccr_paths)
+        assert not pre_flagged, (
+            f"{name}: clean baseline already flags planted paths "
+            f"{sorted(pre_flagged)}")

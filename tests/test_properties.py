@@ -1,5 +1,8 @@
 """Property-based tests (hypothesis) for the system's invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (DecisionTable, RegionMetrics, kmeans_severity,

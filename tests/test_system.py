@@ -69,12 +69,15 @@ def test_end_to_end_detects_injected_imbalance():
             for i in range(m)]
     runner = TimedRegionRunner(tree, warmup=1)
     rm = runner.run(states, data)
-    # inject the imbalance at the metrics level (deterministic, avoids
-    # wall-clock flakiness on a loaded CI machine): shard 3 did 4x work
-    T = rm.metric("cpu_time")
+    # Controlled experiment on real measurements (deterministic, avoids
+    # wall-clock flakiness on a loaded CI machine): first equalize shards —
+    # every shard ran the same jitted work, so per-region cross-shard spread
+    # is pure scheduler noise — then inject "shard 3 did 4x solver work".
     col = rm.col(solver_region.region_id)
-    T[3, col] *= 4.0
-    rm.metric("wall_time")[3, col] *= 4.0
+    for name in ("cpu_time", "wall_time"):
+        T = rm.metric(name)
+        T[:] = T.min(axis=0, keepdims=True)
+        T[3, col] *= 4.0
     rm.metric(FLOPS)[3, col] *= 4.0
     az = AutoAnalyzer(tree)
     res = az.analyze(rm)
