@@ -1,0 +1,131 @@
+"""Scaling benchmarks for the AutoAnalyzer hot path.
+
+A deterministic grid over shards m × regions n for the four analyzer
+kernels — simplified-OPTICS clustering, the full Algorithm 2 dissimilarity
+search, the disparity search, and rough-set reducts — so the cost of
+per-rank similarity analysis stays measured as process counts grow
+(thousands of shards; see docs/performance.md).
+
+``scripts/run_bench.py`` drives these into ``BENCH_analyzer.json`` and
+gates regressions against the committed baseline; ``benchmarks/run.py
+--only analyzer`` prints the same rows as CSV.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import (RegionTree, find_disparity_bottlenecks,
+                        find_dissimilarity_bottlenecks, optics_cluster)
+from repro.core.roughset import DecisionTable
+
+# Grid points: shards m in {8..2048} x regions n in {16..512}.  The smoke
+# grid is the tier-1 CI lane (sub-second); default is the committed
+# baseline's grid.
+_MN_SMOKE = [(8, 16), (32, 16)]
+_MN_DEFAULT = [(m, n)
+               for m in (8, 32, 128, 512, 2048)
+               for n in (16, 64, 128, 512)]
+GRIDS: Dict[str, Dict[str, list]] = {
+    "smoke": {"mn": _MN_SMOKE, "disparity_n": [16, 64],
+              "reducts_attrs": [5, 8]},
+    "default": {"mn": _MN_DEFAULT, "disparity_n": [16, 64, 128, 512],
+                "reducts_attrs": [5, 10, 14]},
+}
+
+
+def cluster_workload(m: int, n: int, seed: int = 0) -> np.ndarray:
+    """(m, n) near-balanced measurement matrix with one straggling shard
+    block — several clusters, like real dissimilar runs."""
+    rng = np.random.default_rng(seed)
+    T = 1.0 + 0.05 * rng.random((m, n))
+    T[: max(1, m // 8), n // 3] *= 6.0
+    return T
+
+
+def algo2_workload(m: int, n: int,
+                   seed: int = 0) -> Tuple[RegionTree, np.ndarray, List[int]]:
+    """Flat n-region tree + matrix with a planted single-region straggler:
+    Algorithm 2 walks every depth-1 region and pins one CCR."""
+    tree = RegionTree("bench")
+    for j in range(1, n + 1):
+        tree.add(f"cr{j}")
+    return tree, cluster_workload(m, n, seed), list(range(1, n + 1))
+
+
+def disparity_workload(n: int,
+                       seed: int = 0) -> Tuple[RegionTree, np.ndarray,
+                                               List[int]]:
+    tree = RegionTree("bench")
+    for j in range(1, n + 1):
+        tree.add(f"cr{j}")
+    rng = np.random.default_rng(seed)
+    vals = 0.01 + 0.02 * rng.random(n)
+    vals[n // 3] = 0.9
+    return tree, vals, list(range(1, n + 1))
+
+
+def reducts_workload(n_attrs: int, n_rows: int = 24,
+                     seed: int = 0) -> DecisionTable:
+    rng = np.random.default_rng(seed)
+    rows = [tuple(int(x) for x in rng.integers(0, 2, n_attrs))
+            for _ in range(n_rows)]
+    decisions = [int(x) for x in rng.integers(0, 2, n_rows)]
+    return DecisionTable([f"a{i}" for i in range(n_attrs)], rows, decisions)
+
+
+def _best_of(fn: Callable[[], object], repeat: int) -> float:
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_grid(grid: str = "default", repeat: int = 3,
+             seed: int = 0) -> Dict[str, Dict[str, float]]:
+    """Time every grid entry (best of ``repeat``); returns
+    ``{entry_name: {dims..., "seconds": t}}``."""
+    spec = GRIDS[grid]
+    entries: Dict[str, Dict[str, float]] = {}
+
+    for m, n in spec["mn"]:
+        T = cluster_workload(m, n, seed)
+        entries[f"cluster/m{m}/n{n}"] = {
+            "m": m, "n": n,
+            "seconds": _best_of(lambda: optics_cluster(T), repeat)}
+
+    for m, n in spec["mn"]:
+        tree, T, rids = algo2_workload(m, n, seed)
+        entries[f"algo2/m{m}/n{n}"] = {
+            "m": m, "n": n,
+            "seconds": _best_of(
+                lambda: find_dissimilarity_bottlenecks(tree, T, rids),
+                repeat)}
+
+    for n in spec["disparity_n"]:
+        tree, vals, rids = disparity_workload(n, seed)
+        entries[f"disparity/n{n}"] = {
+            "n": n,
+            "seconds": _best_of(
+                lambda: find_disparity_bottlenecks(tree, vals, rids),
+                repeat)}
+
+    for a in spec["reducts_attrs"]:
+        table = reducts_workload(a, seed=seed)
+        entries[f"reducts/a{a}"] = {
+            "attrs": a,
+            "seconds": _best_of(table.reducts, repeat)}
+
+    return entries
+
+
+def all_rows() -> List[Tuple[str, float, str]]:
+    """(name, us_per_call, derived) rows for benchmarks/run.py CSV."""
+    entries = run_grid("default", repeat=3)
+    return [(name, e["seconds"] * 1e6,
+             "x".join(str(int(e[d])) for d in ("m", "n", "attrs") if d in e))
+            for name, e in entries.items()]

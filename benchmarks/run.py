@@ -1,7 +1,7 @@
 """Benchmark harness: one function per paper table/figure plus kernel and
 roofline reports.  Prints ``name,us_per_call,derived`` CSV.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--only paper|kernels|roofline]
+Usage: PYTHONPATH=src python -m benchmarks.run [--only paper|kernels|roofline|analyzer]
 """
 from __future__ import annotations
 
@@ -11,10 +11,12 @@ import sys
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=["paper", "kernels", "roofline"],
+    ap.add_argument("--only", choices=["paper", "kernels", "roofline",
+                                       "analyzer"],
                     default=None)
     args = ap.parse_args()
-    from benchmarks import kernel_bench, paper_tables, roofline_report
+    from benchmarks import (analyzer_bench, kernel_bench, paper_tables,
+                            roofline_report)
     rows = []
     if args.only in (None, "paper"):
         rows += paper_tables.all_rows()
@@ -22,6 +24,8 @@ def main() -> None:
         rows += kernel_bench.all_rows()
     if args.only in (None, "roofline"):
         rows += roofline_report.all_rows()
+    if args.only in (None, "analyzer"):
+        rows += analyzer_bench.all_rows()
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,110 @@
+#!/usr/bin/env python
+"""Run the analyzer scaling benchmarks and record/gate BENCH_analyzer.json.
+
+    PYTHONPATH=src python scripts/run_bench.py                 # default grid
+    PYTHONPATH=src python scripts/run_bench.py --grid smoke
+    PYTHONPATH=src python scripts/run_bench.py --out BENCH_analyzer.json
+    PYTHONPATH=src python scripts/run_bench.py --check BENCH_analyzer.json
+
+``--check`` re-runs the baseline file's grid and exits nonzero when any
+entry regresses by more than ``--factor`` (default 1.5x).  Entries whose
+baseline time is below ``--min-seconds`` are reported but never fail the
+check — micro-entries are timer noise, not signal.  Timings are
+best-of-``--repeat`` wall clock, so the gate is meaningful on an otherwise
+idle machine (CI runs the smoke grid; the committed default-grid baseline
+documents the reference machine's trajectory).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+# `python scripts/run_bench.py` puts scripts/ (not the repo root) on
+# sys.path; the benchmarks package lives at the root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--grid", choices=("smoke", "default"), default="default")
+    ap.add_argument("--repeat", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help="write results JSON here (e.g. BENCH_analyzer.json)")
+    ap.add_argument("--check", metavar="BASELINE", default=None,
+                    help="compare against a committed baseline JSON; exit "
+                         "nonzero on regression")
+    ap.add_argument("--factor", type=float, default=1.5,
+                    help="regression threshold for --check (default 1.5x)")
+    ap.add_argument("--min-seconds", type=float, default=1e-3,
+                    help="baseline entries faster than this never fail "
+                         "--check (timer noise floor)")
+    args = ap.parse_args(argv)
+
+    from benchmarks.analyzer_bench import run_grid
+
+    grid = args.grid
+    baseline = None
+    if args.check:
+        with open(args.check) as f:
+            baseline = json.load(f)
+        grid = baseline.get("meta", {}).get("grid", grid)
+
+    entries = run_grid(grid, repeat=args.repeat, seed=args.seed)
+    doc = {
+        "meta": {"grid": grid, "repeat": args.repeat, "seed": args.seed,
+                 "unix_time": int(time.time())},
+        "entries": entries,
+    }
+
+    width = max(len(n) for n in entries) + 2
+    print(f"{'entry':{width}s} {'ms':>10s}")
+    for name, e in entries.items():
+        print(f"{name:{width}s} {e['seconds'] * 1e3:10.3f}")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.out}")
+
+    if baseline is None:
+        return 0
+
+    base_entries = baseline.get("entries", {})
+    missing = sorted(set(base_entries) - set(entries))
+    if missing:
+        print(f"baseline entries not produced by this run: {missing}",
+              file=sys.stderr)
+        return 2
+    regressions = []
+    for name, base in sorted(base_entries.items()):
+        now = entries[name]["seconds"]
+        ref = base["seconds"]
+        ratio = now / ref if ref > 0 else float("inf")
+        flag = ""
+        if ratio > args.factor:
+            if ref < args.min_seconds:
+                flag = "  (noise floor, ignored)"
+            else:
+                regressions.append((name, ref, now, ratio))
+                flag = "  REGRESSION"
+        if flag:
+            print(f"{name}: {ref * 1e3:.3f} ms -> {now * 1e3:.3f} ms "
+                  f"({ratio:.2f}x){flag}")
+    if regressions:
+        print(f"{len(regressions)} entries regressed more than "
+              f"{args.factor}x", file=sys.stderr)
+        return 1
+    print(f"check ok: no entry regressed more than {args.factor}x "
+          f"vs {args.check}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,9 +12,9 @@ Public API:
 from .analyzer import (ATTRIBUTE_MEANING, AnalysisResult, AutoAnalyzer,
                        Verdict)
 from .clustering import (HIGH, LOW, MEDIUM, SEVERITY_NAMES, VERY_HIGH,
-                         VERY_LOW, ClusterResult, dissimilarity_severity,
-                         is_similar, kmeans_1d, kmeans_severity,
-                         optics_cluster)
+                         VERY_LOW, ClusterResult, IncrementalClusterState,
+                         dissimilarity_severity, is_similar, kmeans_1d,
+                         kmeans_severity, optics_cluster)
 from .collector import (RegionBehavior, SyntheticWorkload, TimedRegionRunner,
                         static_metrics_from_costs)
 from .hlo import (COLLECTIVE_OPS, TPU_V5E, CollectiveStats, HardwareSpec,

@@ -186,8 +186,10 @@ class AutoAnalyzer:
     def _dissimilarity_pass(self, rm: RegionMetrics,
                             rids: List[int]) -> DissimilarityReport:
         T = rm.vectors(self.similarity_metric, rids)
-        return find_dissimilarity_bottlenecks(self.tree, T, rids,
-                                              cluster_fn=self._cluster)
+        # Passing the OPTICS parameters (rather than a cluster_fn closure)
+        # selects the incremental-D² fast path of Algorithm 2.
+        return find_dissimilarity_bottlenecks(
+            self.tree, T, rids, threshold_frac=self.threshold_frac)
 
     def _disparity_values(self, rm: RegionMetrics,
                           rids: List[int]) -> np.ndarray:

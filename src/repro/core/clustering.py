@@ -11,17 +11,30 @@ Two deliberately *simple* (lightweight) algorithms:
 * :func:`kmeans_severity` — k-means (k=5) over scalar per-region values used
   to detect **disparity** bottlenecks, mapping regions to severity bands
   very-low(0) .. very-high(4).
+
+Both are vectorized: the OPTICS pass runs over a precomputed pairwise
+squared-distance matrix (blocked ``(a-b)² = a²+b²-2ab`` Gram computation,
+no Python-level pair loops), and :class:`IncrementalClusterState` keeps
+that matrix hot across the one-column-at-a-time toggles of the paper's
+Algorithm 2 (see docs/performance.md for the update math).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+import math
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 # Severity categories (paper §4.2.2).
 VERY_LOW, LOW, MEDIUM, HIGH, VERY_HIGH = 0, 1, 2, 3, 4
 SEVERITY_NAMES = ["very low", "low", "medium", "high", "very high"]
+
+# Row-block size for the pairwise Gram computation: caps the dgemm working
+# set without changing the result (each block row is an independent product).
+_GRAM_BLOCK = 512
+
+PartitionSignature = Tuple[Tuple[int, ...], ...]
 
 
 @dataclasses.dataclass
@@ -31,6 +44,11 @@ class ClusterResult:
     labels: np.ndarray          # cluster id per point, shape (m,)
     n_clusters: int
     threshold: float
+    # Canonical partition signature, built lazily and cached: cluster ids
+    # are arbitrary, so the partition is compared as a sorted tuple of
+    # sorted member tuples.
+    _signature: Optional[PartitionSignature] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def members(self, cid: int) -> List[int]:
         return [int(i) for i in np.nonzero(self.labels == cid)[0]]
@@ -38,15 +56,97 @@ class ClusterResult:
     def sizes(self) -> List[int]:
         return [int((self.labels == c).sum()) for c in range(self.n_clusters)]
 
+    @property
+    def partition_signature(self) -> PartitionSignature:
+        if self._signature is None:
+            groups: List[List[int]] = [[] for _ in range(self.n_clusters)]
+            for i, lab in enumerate(self.labels):
+                groups[int(lab)].append(i)
+            self._signature = tuple(sorted(tuple(g) for g in groups))
+        return self._signature
+
     def same_partition(self, other: "ClusterResult") -> bool:
         """Paper §4.3: 'If the number of clusters or members of a cluster
         change, we think the clustering result changes.'  Compared as
         unlabelled partitions (cluster ids are arbitrary)."""
         if self.n_clusters != other.n_clusters:
             return False
-        mine = {frozenset(self.members(c)) for c in range(self.n_clusters)}
-        theirs = {frozenset(other.members(c)) for c in range(other.n_clusters)}
-        return mine == theirs
+        return self.partition_signature == other.partition_signature
+
+
+def _pairwise_sq_dists(v: np.ndarray,
+                       block: int = _GRAM_BLOCK) -> Tuple[np.ndarray,
+                                                          np.ndarray]:
+    """Squared Euclidean distance matrix via the blocked Gram identity
+    ``|a-b|² = |a|² + |b|² - 2a·b``; returns ``(D², row squared norms)``.
+
+    Negative roundoff residues are clamped to zero.  For integer-valued
+    data below 2^53 every operation here is exact, which the incremental
+    equivalence property tests rely on."""
+    sq = np.einsum("ij,ij->i", v, v)
+    m = v.shape[0]
+    D2 = np.empty((m, m), dtype=np.float64)
+    for s in range(0, m, block):
+        e = min(s + block, m)
+        D2[s:e] = sq[s:e, None] + sq[None, :] - 2.0 * (v[s:e] @ v.T)
+    np.maximum(D2, 0.0, out=D2)
+    return D2, sq
+
+
+def _expand_column_values(values, m: int, n_cols: int) -> np.ndarray:
+    """Resolve toggle values to an explicit (m, n_cols) array.
+
+    Accepted forms: a scalar (fills the whole block), an (m,)-vector (one
+    value per row, applied to every toggled column — the shape of a single
+    measurement column), or an (m, n_cols) array."""
+    vals = np.asarray(values, dtype=np.float64)
+    if vals.ndim == 1:
+        if vals.shape[0] != m:
+            raise ValueError(
+                f"1-D toggle values must have length m={m} (one value per "
+                f"row, applied to every toggled column); got {vals.shape[0]}")
+        vals = vals[:, None]
+    out = np.empty((m, n_cols), dtype=np.float64)
+    out[...] = vals
+    return out
+
+
+def _greedy_cluster(m: int,
+                    row_of: Callable[[int], np.ndarray],
+                    sq: np.ndarray,
+                    threshold: Optional[float],
+                    threshold_frac: float,
+                    count_threshold: int) -> ClusterResult:
+    """The simplified-OPTICS greedy pass over lazily materialized D² rows.
+
+    ``row_of(p)`` returns the squared distances from point p to all points
+    under the *current* matrix; only rows of seed points are ever computed,
+    so a clustering costs O(#clusters · m) beyond the cached state.
+    """
+    labels = np.full(m, -1, dtype=np.int64)
+    n_clusters = 0
+    used_threshold = -1.0
+    while True:
+        unassigned = np.nonzero(labels < 0)[0]
+        if unassigned.size == 0:
+            break
+        p = int(unassigned[0])
+        thr = threshold if threshold is not None else threshold_frac * \
+            math.sqrt(max(float(sq[p]), 0.0))
+        used_threshold = max(used_threshold, thr)
+        # `<=` (not the paper's strict `<`) so identical vectors cluster
+        # together even when the seed norm — and hence the threshold — is 0.
+        row = row_of(p)
+        cand = unassigned[row[unassigned] <= thr * thr]
+        cand = cand[cand != p]
+        if cand.size >= count_threshold:
+            labels[p] = n_clusters
+            labels[cand] = n_clusters
+        else:
+            labels[p] = n_clusters  # isolated point => its own cluster
+        n_clusters += 1
+    return ClusterResult(labels=labels, n_clusters=n_clusters,
+                         threshold=used_threshold)
 
 
 def optics_cluster(
@@ -71,31 +171,116 @@ def optics_cluster(
     if v.ndim != 2:
         raise ValueError("vectors must be (m, n)")
     m = v.shape[0]
-    labels = np.full(m, -1, dtype=np.int64)
-    n_clusters = 0
-    used_threshold = -1.0
-    for p in range(m):
-        if labels[p] >= 0:
-            continue
-        thr = threshold if threshold is not None else threshold_frac * float(
-            np.linalg.norm(v[p]))
-        used_threshold = max(used_threshold, thr)
-        # Gather unassigned neighbours of the seed.
-        # `<=` (not the paper's strict `<`) so identical vectors cluster
-        # together even when the seed norm — and hence the threshold — is 0.
-        cand = [q for q in range(m)
-                if labels[q] < 0 and q != p
-                and float(np.linalg.norm(v[p] - v[q])) <= thr]
-        if len(cand) >= count_threshold:
-            labels[p] = n_clusters
-            for q in cand:
-                labels[q] = n_clusters
-            n_clusters += 1
-        else:
-            labels[p] = n_clusters  # isolated point => its own cluster
-            n_clusters += 1
-    return ClusterResult(labels=labels, n_clusters=n_clusters,
-                         threshold=used_threshold)
+    sq = np.einsum("ij,ij->i", v, v)
+
+    def row_of(p: int) -> np.ndarray:
+        # Gram identity per seed row, computed lazily: the greedy pass only
+        # reads rows of its seed points, so a from-scratch clustering costs
+        # O(#clusters · m · n) — no m×m materialization, no pair loops.
+        return np.maximum(sq[p] + sq - 2.0 * (v @ v[p]), 0.0)
+
+    return _greedy_cluster(m, row_of, sq, threshold, threshold_frac,
+                           count_threshold)
+
+
+class IncrementalClusterState:
+    """Cached pairwise-D² state for Algorithm 2's column toggles.
+
+    Algorithm 2 (``find_dissimilarity_bottlenecks``) changes exactly one
+    column — or one group of columns — of the (m, n) measurement matrix per
+    step, clusters, and reverts.  Re-deriving the pairwise distances from
+    scratch costs O(m²·n) per step; the toggle only moves them by
+
+        D²[p,q] += (T[p,j] - T[q,j])² - (W[p,j] - W[q,j])²
+
+    per toggled column j (old values W, new values T), an O(m²) rank-1
+    delta — and the greedy pass only ever reads the D² rows of its seed
+    points, so each trial clustering costs O(#clusters · m · depth).
+
+    Toggles nest as an explicit push/pop stack (the depth-walk of Algorithm
+    2 restores child columns while a parent stays zeroed).  ``pop`` restores
+    the exact pre-push arrays, so state never drifts across the hundreds of
+    toggles of a deep search; the base D² matrix is computed once and never
+    mutated.
+    """
+
+    def __init__(self, matrix: np.ndarray,
+                 threshold: Optional[float] = None,
+                 threshold_frac: float = 0.10,
+                 count_threshold: int = 1):
+        self._W = np.array(matrix, dtype=np.float64)
+        if self._W.ndim != 2:
+            raise ValueError("matrix must be (m, n)")
+        self._m = self._W.shape[0]
+        self._threshold = threshold
+        self._threshold_frac = threshold_frac
+        self._count_threshold = count_threshold
+        self._D2, sq = _pairwise_sq_dists(self._W)
+        self._sq = sq
+        # stack of (cols, old values, installed values, saved sq) — sq is
+        # replaced, not updated in place, so popping restores it
+        # bit-for-bit; the installed values (not the live matrix) drive the
+        # per-level D² deltas so that toggles of overlapping columns
+        # telescope correctly.
+        self._stack: List[Tuple[List[int], np.ndarray, np.ndarray,
+                                np.ndarray]] = []
+
+    @property
+    def matrix(self) -> np.ndarray:
+        """The current trial matrix (base + active toggles).  Read-only by
+        convention: mutate only through push/pop."""
+        return self._W
+
+    @property
+    def depth(self) -> int:
+        return len(self._stack)
+
+    def push(self, cols: Sequence[int], values) -> None:
+        """Set ``matrix[:, cols] = values`` as a revertible toggle.
+
+        ``values`` is a scalar (pass ``0.0`` to zero the group), an
+        (m,)-vector applied per-row to every toggled column (e.g. an
+        original ``T`` column to restore), or an (m, len(cols)) array —
+        see :func:`_expand_column_values`."""
+        cols = [int(c) for c in cols]
+        old = self._W[:, cols].copy()
+        new = _expand_column_values(values, self._m, len(cols))
+        saved_sq = self._sq
+        self._sq = saved_sq - np.einsum("ij,ij->i", old, old) \
+            + np.einsum("ij,ij->i", new, new)
+        self._W[:, cols] = new
+        self._stack.append((cols, old, new, saved_sq))
+
+    def pop(self) -> None:
+        """Revert the most recent :meth:`push` exactly."""
+        cols, old, _new, saved_sq = self._stack.pop()
+        self._W[:, cols] = old
+        self._sq = saved_sq
+
+    def _row(self, p: int) -> np.ndarray:
+        """D² row of point p under the current matrix: base row plus the
+        per-toggle deltas, O(m · columns-toggled).  Each level contributes
+        the delta between the values it found and the values it installed;
+        levels re-toggling a column telescope (old_{k+1} == new_k)."""
+        row = self._D2[p]
+        if not self._stack:
+            return row
+        row = row.copy()
+        for cols, old, new, _ in self._stack:
+            dn = new - new[p]
+            do = old - old[p]
+            row += np.einsum("ij,ij->i", dn, dn) \
+                - np.einsum("ij,ij->i", do, do)
+        np.maximum(row, 0.0, out=row)
+        return row
+
+    def cluster(self) -> ClusterResult:
+        """Cluster the current trial matrix; identical to
+        ``optics_cluster(state.matrix, ...)`` with the state's parameters
+        (bit-for-bit on integer-valued data, to roundoff otherwise)."""
+        return _greedy_cluster(self._m, self._row, self._sq,
+                               self._threshold, self._threshold_frac,
+                               self._count_threshold)
 
 
 def is_similar(vectors: np.ndarray, **kw) -> bool:
@@ -125,7 +310,8 @@ def kmeans_1d(values: np.ndarray, k: int, n_iter: int = 100,
               seed: int = 0) -> np.ndarray:
     """Deterministic 1-D k-means (Hartigan/Wong-style Lloyd iterations with
     quantile init).  Returns the label per value, labels ordered so that
-    label i has the i-th smallest centroid."""
+    label i has the i-th smallest centroid.  Centroid updates run through
+    ``np.bincount`` (no per-cluster Python loop)."""
     x = np.asarray(values, dtype=np.float64).ravel()
     n = x.size
     if n == 0:
@@ -137,14 +323,14 @@ def kmeans_1d(values: np.ndarray, k: int, n_iter: int = 100,
         return np.array([mapping[val] for val in x], dtype=np.int64)
     # Quantile init is deterministic and robust for 1-D data.
     centroids = np.quantile(x, np.linspace(0, 1, k))
+    lab = np.zeros(n, dtype=np.int64)
     for _ in range(n_iter):
         d = np.abs(x[:, None] - centroids[None, :])
         lab = np.argmin(d, axis=1)
-        new = centroids.copy()
-        for c in range(k):
-            sel = x[lab == c]
-            if sel.size:
-                new[c] = sel.mean()
+        counts = np.bincount(lab, minlength=k)
+        sums = np.bincount(lab, weights=x, minlength=k)
+        # Empty clusters keep their previous centroid.
+        new = np.where(counts > 0, sums / np.maximum(counts, 1), centroids)
         if np.allclose(new, centroids):
             break
         centroids = new

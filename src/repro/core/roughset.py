@@ -18,6 +18,44 @@ import dataclasses
 import itertools
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
+# The reduct search enumerates attribute subsets by size — O(2^|A|) in the
+# worst case.  The paper's decision tables have 5 attributes; anything past
+# this bound is a modelling error, not a bigger search.
+MAX_EXHAUSTIVE_ATTRIBUTES = 20
+
+
+def _minimal_hitting_sets(
+        clauses: Sequence[FrozenSet[str]]) -> List[FrozenSet[str]]:
+    """All minimum-size hitting sets of ``clauses`` (the search stops at
+    the first productive size: larger hitting sets are either supersets of
+    a found one or outside the paper's 'core attributions' notion).
+
+    Pruning that provably cannot change the result: any hitting set must
+    contain every attribute that appears as a singleton clause
+    (``forced``), so candidates missing one — and sizes below
+    ``len(forced)`` — are skipped before the clause scan.
+    """
+    attrs = sorted({a for c in clauses for a in c})
+    if len(attrs) > MAX_EXHAUSTIVE_ATTRIBUTES:
+        raise ValueError(
+            f"reduct search over {len(attrs)} attributes exceeds the "
+            f"exhaustive-search bound ({MAX_EXHAUSTIVE_ATTRIBUTES}); "
+            "decision tables are expected to stay near the paper's 5 "
+            "attributes — reduce the attribute set or use a heuristic "
+            "reducer")
+    forced = frozenset(a for c in clauses if len(c) == 1 for a in c)
+    hits: List[FrozenSet[str]] = []
+    for size in range(max(1, len(forced)), len(attrs) + 1):
+        for combo in itertools.combinations(attrs, size):
+            s = frozenset(combo)
+            if not forced <= s:
+                continue  # misses a singleton clause
+            if all(s & c for c in clauses):
+                hits.append(s)
+        if hits:
+            break  # all minimum-size hitting sets found
+    return hits
+
 
 @dataclasses.dataclass
 class DecisionTable:
@@ -85,20 +123,7 @@ class DecisionTable:
         clauses = self.discernibility_clauses()
         if not clauses:
             return []
-        attrs = sorted({a for c in clauses for a in c})
-        hits: List[FrozenSet[str]] = []
-        # |A| is small (5 in the paper); exhaustive subset search by size.
-        for size in range(1, len(attrs) + 1):
-            for combo in itertools.combinations(attrs, size):
-                s = frozenset(combo)
-                if any(h <= s for h in hits):
-                    continue  # not minimal
-                if all(s & c for c in clauses):
-                    hits.append(s)
-            if hits and all(len(h) <= size for h in hits):
-                # All minimal hitting sets of size <= current found; any
-                # larger candidate would be non-minimal.
-                break
+        hits = _minimal_hitting_sets(clauses)
         return sorted(hits, key=lambda s: (len(s), sorted(s)))
 
     def object_clauses(self, index: int) -> List[FrozenSet[str]]:
@@ -121,17 +146,7 @@ class DecisionTable:
         clauses = self.object_clauses(index)
         if not clauses:
             return []
-        attrs = sorted({a for c in clauses for a in c})
-        hits: List[FrozenSet[str]] = []
-        for size in range(1, len(attrs) + 1):
-            for combo in itertools.combinations(attrs, size):
-                s = frozenset(combo)
-                if any(h <= s for h in hits):
-                    continue
-                if all(s & c for c in clauses):
-                    hits.append(s)
-            if hits:
-                break  # all minimal reducts have this size
+        hits = _minimal_hitting_sets(clauses)
         return sorted(hits, key=lambda s: sorted(s))
 
     def core(self) -> FrozenSet[str]:

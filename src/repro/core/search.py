@@ -2,6 +2,12 @@
 
 * :func:`find_dissimilarity_bottlenecks` — Algorithm 2: top-down zeroing
   search over the code-region tree against the simplified-OPTICS clustering.
+  Every step of the search toggles exactly one column (or one group of
+  adjacent columns) of the (m, n) measurement matrix, so the default path
+  runs on an :class:`IncrementalClusterState`: the pairwise-D² matrix is
+  computed once and each toggle is an O(m²)-bounded delta instead of an
+  O(m²·n) from-scratch reclustering (docs/performance.md has the math and
+  measured speedups).
 * :func:`find_disparity_bottlenecks` — k-means severity bands over CRNM,
   then the leaf-or-dominant refinement to CCCRs.
 """
@@ -12,7 +18,9 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from .clustering import (HIGH, SEVERITY_NAMES, ClusterResult, kmeans_severity,
+from .clustering import (HIGH, SEVERITY_NAMES, ClusterResult,
+                         IncrementalClusterState, _expand_column_values,
+                         dissimilarity_severity, kmeans_severity,
                          optics_cluster)
 from .regions import CodeRegion, RegionTree
 
@@ -38,29 +46,60 @@ class DisparityReport:
 ClusterFn = Callable[[np.ndarray], ClusterResult]
 
 
-def _default_cluster(vectors: np.ndarray) -> ClusterResult:
-    return optics_cluster(vectors)
+class _ScratchToggleState:
+    """The generic-path twin of :class:`IncrementalClusterState`: the same
+    push/pop/cluster interface over an explicit work matrix and an opaque
+    ``cluster_fn``, re-clustering from scratch per trial.  Lets one
+    Algorithm 2 driver serve both paths."""
+
+    def __init__(self, work: np.ndarray, cluster_fn: ClusterFn):
+        self._W = work
+        self._fn = cluster_fn
+        self._stack: List[tuple] = []
+
+    def push(self, cols, values) -> None:
+        cols = [int(c) for c in cols]
+        self._stack.append((cols, self._W[:, cols].copy()))
+        self._W[:, cols] = _expand_column_values(values, self._W.shape[0],
+                                                 len(cols))
+
+    def pop(self) -> None:
+        cols, old = self._stack.pop()
+        self._W[:, cols] = old
+
+    def cluster(self) -> ClusterResult:
+        return self._fn(self._W)
 
 
 def find_dissimilarity_bottlenecks(
     tree: RegionTree,
     T: np.ndarray,
     region_ids: Sequence[int],
-    cluster_fn: ClusterFn = _default_cluster,
+    cluster_fn: Optional[ClusterFn] = None,
     max_composite: Optional[int] = None,
+    threshold: Optional[float] = None,
+    threshold_frac: float = 0.10,
+    count_threshold: int = 1,
 ) -> DissimilarityReport:
     """Algorithm 2 of the paper.
 
     ``T`` is the (m, n) per-process measurement matrix (CPU clock time by
     default), columns ordered as ``region_ids``.  Management regions must
     already be excluded by the caller.
+
+    With the default ``cluster_fn=None`` the simplified-OPTICS parameters
+    (``threshold``/``threshold_frac``/``count_threshold``) drive the
+    incremental fast path.  Passing an explicit ``cluster_fn`` keeps the
+    generic contract — any callable mapping a matrix to a
+    :class:`ClusterResult` — at the cost of a from-scratch clustering per
+    toggle.
     """
     T = np.asarray(T, dtype=np.float64)
     col = {rid: j for j, rid in enumerate(region_ids)}
     regions = {r.region_id: r for r in tree.regions()
                if r.region_id in col}
 
-    def depth1(rids=None) -> List[CodeRegion]:
+    def depth1() -> List[CodeRegion]:
         return [r for r in regions.values() if r.depth == 1]
 
     # Lines 3-9: zero depth>1 columns, baseline clustering.
@@ -68,14 +107,23 @@ def find_dissimilarity_bottlenecks(
     for rid, r in regions.items():
         if r.depth > 1:
             work[:, col[rid]] = 0.0
-    baseline = cluster_fn(work)
-    from .clustering import dissimilarity_severity
+
+    if cluster_fn is not None:
+        state = _ScratchToggleState(work, cluster_fn)
+    else:
+        state = IncrementalClusterState(work, threshold=threshold,
+                                        threshold_frac=threshold_frac,
+                                        count_threshold=count_threshold)
+    baseline = state.cluster()
     severity = dissimilarity_severity(baseline, work)
     if baseline.n_clusters == 1:
         return DissimilarityReport(False, baseline, [], [], 0.0)
 
     ccrs: List[int] = []
     cccrs: List[int] = []
+
+    def trial_changes_baseline() -> bool:
+        return not state.cluster().same_partition(baseline)
 
     def analyze_children(parent: CodeRegion) -> bool:
         """Restore each child alone; if the clustering equals the baseline
@@ -86,31 +134,26 @@ def find_dissimilarity_bottlenecks(
             if child.region_id not in col:
                 continue
             k = col[child.region_id]
-            saved = work[:, k].copy()
-            work[:, k] = T[:, k]
-            res = cluster_fn(work)
-            if res.same_partition(baseline):
+            state.push([k], T[:, k])
+            if state.cluster().same_partition(baseline):
                 ccrs.append(child.region_id)
                 any_child = True
                 deeper = analyze_children(child)
                 if child.is_leaf or not deeper:
                     cccrs.append(child.region_id)
-            work[:, k] = saved
+            state.pop()
         return any_child
 
     # Lines 10-30: zero each depth-1 region; a change in the clustering
     # result marks it as a CCR.
     for r in depth1():
-        j = col[r.region_id]
-        saved = work[:, j].copy()
-        work[:, j] = 0.0
-        res = cluster_fn(work)
-        if not res.same_partition(baseline):
+        state.push([col[r.region_id]], 0.0)
+        if trial_changes_baseline():
             ccrs.append(r.region_id)
             had_child_ccr = analyze_children(r)
             if r.is_leaf or not had_child_ccr:
                 cccrs.append(r.region_id)
-        work[:, j] = saved
+        state.pop()
 
     s = 1
     if not ccrs:
@@ -122,14 +165,11 @@ def find_dissimilarity_bottlenecks(
         while not ccrs and s <= max(rmax, 2) and s <= len(d1):
             for start in range(0, len(d1) - s + 1):
                 group = d1[start:start + s]
-                cols = [col[g.region_id] for g in group]
-                saved = work[:, cols].copy()
-                work[:, cols] = 0.0
-                res = cluster_fn(work)
-                if not res.same_partition(baseline):
+                state.push([col[g.region_id] for g in group], 0.0)
+                if trial_changes_baseline():
                     ccrs.extend(g.region_id for g in group)
                     cccrs.extend(g.region_id for g in group)
-                work[:, cols] = saved
+                state.pop()
             s += 1
         s -= 1
 

@@ -468,6 +468,20 @@ register_entry(CorpusEntry(
 ))
 
 register_entry(CorpusEntry(
+    name="npar1way/collective-straggler",
+    app="npar1way", backend="synthetic",
+    description="Rank 4 arrives late to both collectives (cr9+cr10): "
+                "every other rank waits in each — only the composite-"
+                "region phase of Algorithm 2 can pin the pair",
+    build=_synthetic(baseline_npar1way,
+                     F.CollectiveStraggler(("NPAR1WAY/cr9", "NPAR1WAY/cr10"),
+                                           straggler=4, delay=2.0)),
+    truth=GroundTruth("dissimilarity",
+                      frozenset({"NPAR1WAY/cr9", "NPAR1WAY/cr10"})),
+    analyzer_kw=(("similarity_metric", WALL_TIME),),
+))
+
+register_entry(CorpusEntry(
     name="npar1way/compute-hotspot-cr3",
     app="npar1way", backend="synthetic",
     description="NPAR1WAY cr3 instructions-retired disparity (8x work)",

@@ -197,6 +197,39 @@ class CommImbalance:
 
 
 @dataclasses.dataclass(frozen=True)
+class CollectiveStraggler:
+    """One slow rank stretches every collective (the ROADMAP's
+    collective-straggler archetype): the straggler arrives ``delay``
+    seconds late to each listed comm region, so every *other* rank sits in
+    the collective for an extra ``delay`` of wall/comm time while the
+    straggler itself, arriving last, never waits.  The signal spreads
+    evenly over all the comm regions, so no single region reproduces it —
+    Algorithm 2 must fall back to composite regions to locate the set.
+
+    Pure waiting: the CPU clock is untouched, so corpus entries pair this
+    with ``similarity_metric=wall_time``.  No decision attribute inflates
+    (no extra bytes are moved), hence ``causes`` is empty."""
+
+    regions: Tuple[str, ...]
+    straggler: int
+    delay: float = 2.0
+    kind: ClassVar[str] = DISSIMILARITY
+    causes: ClassVar[FrozenSet[str]] = frozenset()
+
+    def apply(self, tree: RegionTree, rm: RegionMetrics,
+              rng: np.random.Generator) -> None:
+        waits = np.full(rm.n_processes, self.delay)
+        waits[self.straggler] = 0.0
+        for region in self.regions:
+            _add_cells(tree, rm, region, WALL_TIME, waits)
+            _add_cells(tree, rm, region, COMM_TIME, waits)
+
+    @property
+    def paths(self) -> Tuple[str, ...]:
+        return tuple(self.regions)
+
+
+@dataclasses.dataclass(frozen=True)
 class CacheThrash:
     """A region starts missing in cache: HBM traffic per flop inflates by
     ``byte_factor`` and the same flops take ``slowdown``× longer on every

@@ -1,0 +1,70 @@
+"""Smoke tests for the analyzer scaling benchmarks and their CI gate
+(scripts/run_bench.py --check): tiny sizes, tier-1 lane."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_bench(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "run_bench.py"),
+         *args],
+        cwd=REPO, env=env, capture_output=True, text=True)
+
+
+def test_run_grid_smoke_entries_positive():
+    sys.path.insert(0, REPO)
+    from benchmarks.analyzer_bench import run_grid
+    entries = run_grid("smoke", repeat=1)
+    assert entries
+    for name, e in entries.items():
+        assert e["seconds"] > 0, name
+    kinds = {name.split("/")[0] for name in entries}
+    assert kinds == {"cluster", "algo2", "disparity", "reducts"}
+
+
+def test_bench_writes_json_and_self_check_passes(tmp_path):
+    out = tmp_path / "bench.json"
+    r = _run_bench("--grid", "smoke", "--repeat", "2", "--out", str(out))
+    assert r.returncode == 0, r.stderr
+    doc = json.loads(out.read_text())
+    assert doc["meta"]["grid"] == "smoke"
+    assert doc["entries"]
+    # A fresh run against the just-written baseline must pass the gate
+    # (same machine, moments apart).
+    r2 = _run_bench("--check", str(out))
+    assert r2.returncode == 0, r2.stdout + r2.stderr
+
+
+def test_check_flags_regression(tmp_path):
+    out = tmp_path / "bench.json"
+    r = _run_bench("--grid", "smoke", "--repeat", "2", "--out", str(out))
+    assert r.returncode == 0, r.stderr
+    doc = json.loads(out.read_text())
+    # Pretend the baseline machine was 100x faster: every entry now
+    # regresses far past any honest timing jitter.
+    for e in doc["entries"].values():
+        e["seconds"] /= 100.0
+    out.write_text(json.dumps(doc))
+    r2 = _run_bench("--check", str(out), "--min-seconds", "0")
+    assert r2.returncode == 1, r2.stdout + r2.stderr
+    assert "REGRESSION" in r2.stdout
+
+
+def test_check_rejects_missing_entries(tmp_path):
+    out = tmp_path / "bench.json"
+    r = _run_bench("--grid", "smoke", "--repeat", "1", "--out", str(out))
+    assert r.returncode == 0, r.stderr
+    doc = json.loads(out.read_text())
+    doc["entries"]["algo2/m999999/n1"] = {"m": 999999, "n": 1, "seconds": 1.0}
+    out.write_text(json.dumps(doc))
+    r2 = _run_bench("--check", str(out))
+    assert r2.returncode == 2

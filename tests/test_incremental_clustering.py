@@ -1,0 +1,234 @@
+"""Equivalence properties of the vectorized/incremental clustering core.
+
+Two families of proofs-by-property:
+
+* :class:`IncrementalClusterState` under random single-column and
+  group-column toggles must produce the same partition as a from-scratch
+  ``optics_cluster`` over the equivalent trial matrix.  Matrices are
+  integer-valued (well below 2^53), where every operation in both paths —
+  Gram products, squared-norm bookkeeping, per-toggle deltas — is exact in
+  float64, so the equivalence is bitwise, not approximate.
+
+* the ``np.bincount`` k-means centroid update must reproduce the reference
+  per-cluster-mean loop label-for-label (again exact on integer data:
+  identical centroid trajectories).
+
+The properties run as a seeded randomized sweep (no dependency needed);
+when hypothesis is installed an adversarial shrinking variant runs too.
+"""
+import numpy as np
+import pytest
+
+from repro.core import IncrementalClusterState, kmeans_1d, optics_cluster
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+# Integer-valued float matrices: exact in float64 through sums of squares
+# (values <= 2^10, n <= 32 -> row norms <= 2^25 << 2^53).
+_VMAX = 1024
+
+
+def _random_matrix(rng, max_m=14, max_n=10):
+    m = int(rng.integers(2, max_m + 1))
+    n = int(rng.integers(1, max_n + 1))
+    T = rng.integers(0, _VMAX + 1, size=(m, n)).astype(np.float64)
+    # bias toward structure: sometimes duplicate rows / zero rows, the
+    # edge cases of the `<=` threshold comparison
+    if rng.random() < 0.4 and m >= 3:
+        T[int(rng.integers(0, m))] = T[int(rng.integers(0, m))]
+    if rng.random() < 0.3:
+        T[int(rng.integers(0, m))] = 0.0
+    return T
+
+
+def _random_toggles(rng, n, max_toggles=6):
+    """A random toggle script: each step zeroes or restores a single
+    column or an adjacent group (exactly the moves of Algorithm 2)."""
+    steps = []
+    for _ in range(int(rng.integers(1, max_toggles + 1))):
+        start = int(rng.integers(0, n))
+        width = int(rng.integers(1, min(3, n - start) + 1))
+        steps.append((list(range(start, start + width)),
+                      bool(rng.random() < 0.7)))
+    return steps
+
+
+def assert_same_partition(a, b):
+    assert a.n_clusters == b.n_clusters
+    assert a.partition_signature == b.partition_signature
+
+
+class TestIncrementalEquivalence:
+    @pytest.mark.parametrize("seed", range(60))
+    def test_nested_toggles_match_scratch(self, seed):
+        """Push toggles like Algorithm 2's depth walk (nested scopes) and
+        compare every intermediate clustering against from-scratch."""
+        rng = np.random.default_rng(1000 + seed)
+        T = _random_matrix(rng)
+        steps = _random_toggles(rng, T.shape[1])
+        state = IncrementalClusterState(T)
+        work = T.copy()
+        assert_same_partition(state.cluster(), optics_cluster(work))
+        for cols, zero in steps:
+            values = 0.0 if zero else T[:, cols]
+            state.push(cols, values)
+            work[:, cols] = values
+            assert_same_partition(state.cluster(), optics_cluster(work))
+        for _ in steps:
+            state.pop()
+        assert_same_partition(state.cluster(), optics_cluster(T))
+        np.testing.assert_array_equal(state.matrix, T)
+
+    @pytest.mark.parametrize("seed", range(60))
+    def test_toggle_revert_matches_baseline(self, seed):
+        """Algorithm 2's depth-1 walk shape: toggle, test, revert — the
+        state after every pop must equal the untouched baseline."""
+        rng = np.random.default_rng(5000 + seed)
+        T = _random_matrix(rng)
+        steps = _random_toggles(rng, T.shape[1])
+        state = IncrementalClusterState(T)
+        base = state.cluster()
+        for cols, zero in steps:
+            values = 0.0 if zero else T[:, cols]
+            state.push(cols, values)
+            work = T.copy()
+            work[:, cols] = values
+            assert_same_partition(state.cluster(), optics_cluster(work))
+            state.pop()
+            assert_same_partition(state.cluster(), base)
+            np.testing.assert_array_equal(state.matrix, T)
+
+    @pytest.mark.parametrize("seed", range(20))
+    def test_threshold_frac_respected(self, seed):
+        rng = np.random.default_rng(9000 + seed)
+        T = _random_matrix(rng)
+        frac = float(rng.uniform(0.05, 0.5))
+        state = IncrementalClusterState(T, threshold_frac=frac)
+        assert_same_partition(state.cluster(),
+                              optics_cluster(T, threshold_frac=frac))
+
+    def test_group_toggle_equals_stacked_singles(self):
+        rng = np.random.default_rng(7)
+        T = rng.integers(0, _VMAX, size=(10, 6)).astype(np.float64)
+        grouped = IncrementalClusterState(T)
+        grouped.push([1, 2, 3], 0.0)
+        stacked = IncrementalClusterState(T)
+        for c in (1, 2, 3):
+            stacked.push([c], 0.0)
+        assert_same_partition(grouped.cluster(), stacked.cluster())
+
+
+def _kmeans_1d_reference(values, k, n_iter=100):
+    """The pre-vectorization kmeans_1d (per-cluster Python mean loop),
+    kept verbatim as the equivalence oracle."""
+    x = np.asarray(values, dtype=np.float64).ravel()
+    n = x.size
+    if n == 0:
+        return np.zeros(0, dtype=np.int64)
+    uniq = np.unique(x)
+    if uniq.size <= k:
+        mapping = {val: i for i, val in enumerate(np.sort(uniq))}
+        return np.array([mapping[val] for val in x], dtype=np.int64)
+    centroids = np.quantile(x, np.linspace(0, 1, k))
+    for _ in range(n_iter):
+        d = np.abs(x[:, None] - centroids[None, :])
+        lab = np.argmin(d, axis=1)
+        new = centroids.copy()
+        for c in range(k):
+            sel = x[lab == c]
+            if sel.size:
+                new[c] = sel.mean()
+        if np.allclose(new, centroids):
+            break
+        centroids = new
+    order = np.argsort(centroids)
+    rank = np.empty(k, dtype=np.int64)
+    rank[order] = np.arange(k)
+    return rank[lab]
+
+
+class TestKMeansEquivalence:
+    @pytest.mark.parametrize("seed", range(60))
+    def test_vectorized_matches_reference(self, seed):
+        rng = np.random.default_rng(3000 + seed)
+        n = int(rng.integers(1, 61))
+        k = int(rng.integers(2, 8))
+        x = rng.integers(0, _VMAX + 1, size=n).astype(np.float64)
+        np.testing.assert_array_equal(kmeans_1d(x, k),
+                                      _kmeans_1d_reference(x, k))
+
+    @pytest.mark.parametrize("seed", range(30))
+    def test_vectorized_matches_reference_wide_range(self, seed):
+        rng = np.random.default_rng(4000 + seed)
+        x = rng.integers(0, 2 ** 20, size=int(rng.integers(2, 41))) \
+            .astype(np.float64)
+        np.testing.assert_array_equal(kmeans_1d(x, 5),
+                                      _kmeans_1d_reference(x, 5))
+
+
+class TestPartitionSignature:
+    def test_signature_cached_and_label_invariant(self):
+        v = np.array([[0.0], [0.0], [9.0], [9.0]])
+        a = optics_cluster(v)
+        b = optics_cluster(v[::-1])
+        assert a.same_partition(b)
+        # cached after first use
+        assert a._signature is not None
+        assert a.partition_signature is a.partition_signature
+
+    def test_different_partitions_differ(self):
+        a = optics_cluster(np.array([[0.0], [0.0], [9.0]]))
+        b = optics_cluster(np.array([[0.0], [9.0], [9.0]]))
+        assert not a.same_partition(b)
+
+
+if HAVE_HYPOTHESIS:
+    int_vals = st.integers(0, _VMAX)
+
+    @st.composite
+    def int_matrices(draw, max_m=12, max_n=8):
+        m = draw(st.integers(2, max_m))
+        n = draw(st.integers(1, max_n))
+        rows = draw(st.lists(st.lists(int_vals, min_size=n, max_size=n),
+                             min_size=m, max_size=m))
+        return np.array(rows, dtype=np.float64)
+
+    @st.composite
+    def matrix_and_toggles(draw, max_toggles=6):
+        T = draw(int_matrices())
+        n = T.shape[1]
+        steps = []
+        for _ in range(draw(st.integers(1, max_toggles))):
+            start = draw(st.integers(0, n - 1))
+            width = draw(st.integers(1, min(3, n - start)))
+            zero = draw(st.booleans())
+            steps.append((list(range(start, start + width)), zero))
+        return T, steps
+
+    class TestIncrementalEquivalenceHypothesis:
+        @given(matrix_and_toggles())
+        @settings(max_examples=80, deadline=None)
+        def test_nested_toggles_match_scratch(self, case):
+            T, steps = case
+            state = IncrementalClusterState(T)
+            work = T.copy()
+            assert_same_partition(state.cluster(), optics_cluster(work))
+            for cols, zero in steps:
+                values = 0.0 if zero else T[:, cols]
+                state.push(cols, values)
+                work[:, cols] = values
+                assert_same_partition(state.cluster(), optics_cluster(work))
+            for _ in steps:
+                state.pop()
+            assert_same_partition(state.cluster(), optics_cluster(T))
+
+        @given(int_matrices())
+        @settings(max_examples=60, deadline=None)
+        def test_kmeans_matches_reference(self, T):
+            x = T.ravel()
+            np.testing.assert_array_equal(kmeans_1d(x, 5),
+                                          _kmeans_1d_reference(x, 5))

@@ -73,3 +73,42 @@ class TestMechanics:
             DecisionTable(attributes=["a"], rows=[(1, 2)], decisions=[0])
         with pytest.raises(ValueError):
             DecisionTable(attributes=["a"], rows=[(1,)], decisions=[])
+
+
+class TestExhaustiveSearchBounds:
+    def test_attribute_guard_raises_above_bound(self):
+        """The 2^|A| reduct search refuses to start past the attribute
+        bound — a modelling error, not a bigger search."""
+        n = 22
+        base = tuple(0 for _ in range(n))
+        rows, decisions = [base], [0]
+        for i in range(n):
+            r = list(base)
+            r[i] = 1
+            rows.append(tuple(r))
+            decisions.append(1)
+        t = DecisionTable(attributes=[f"a{i}" for i in range(n)],
+                          rows=rows, decisions=decisions)
+        with pytest.raises(ValueError, match="exceeds the exhaustive"):
+            t.reducts()
+        with pytest.raises(ValueError, match="exceeds the exhaustive"):
+            t.object_reducts(0)
+
+    def test_guard_counts_clause_attributes_not_table_columns(self):
+        """A wide table whose clauses only involve a few attributes still
+        reduces fine."""
+        n = 30
+        rows = [tuple(0 for _ in range(n)), tuple([1] + [0] * (n - 1))]
+        t = DecisionTable(attributes=[f"a{i}" for i in range(n)],
+                          rows=rows, decisions=[0, 1])
+        assert t.reducts() == [frozenset({"a0"})]
+
+    def test_forced_singleton_pruning_preserves_results(self):
+        """Singleton clauses force their attribute into every reduct; the
+        pruned search must return exactly the classical answer."""
+        t = DecisionTable(
+            attributes=["a", "b", "c"],
+            rows=[(0, 0, 0), (1, 0, 0), (1, 1, 0), (0, 0, 1)],
+            decisions=[0, 1, 2, 3])
+        for red in t.reducts():
+            assert all(red & c for c in t.discernibility_clauses())

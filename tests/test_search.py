@@ -104,3 +104,53 @@ class TestDisparitySearch:
         rep = find_disparity_bottlenecks(tree, vals, rids)
         bands = severity_banding(rep)
         assert sum(len(v) for v in bands.values()) == 14
+
+
+class TestIncrementalFastPath:
+    """The incremental default path and the generic cluster_fn path are the
+    same Algorithm 2; reports must agree."""
+
+    def _workloads(self):
+        tree = st_region_tree()
+        yield tree, {r: np.ones(8) for r in range(1, 15)}
+        imb = np.array([1, 4, 4, 7, 10, 13, 10, 13], dtype=float)
+        times = {r: np.ones(8) for r in range(1, 15)}
+        times[11] = imb * 10
+        times[14] = imb * 10 + 2.0
+        yield tree, times
+        times = {r: np.ones(8) for r in range(1, 15)}
+        times[8] = np.array([1, 1, 1, 1, 50, 50, 50, 50], dtype=float)
+        yield tree, times
+
+    def test_matches_generic_path(self):
+        from repro.core import optics_cluster
+        for tree, times in self._workloads():
+            T, rids = make_matrix(tree, times)
+            fast = find_dissimilarity_bottlenecks(tree, T, rids)
+            generic = find_dissimilarity_bottlenecks(
+                tree, T, rids, cluster_fn=optics_cluster)
+            assert fast.exists == generic.exists
+            assert fast.ccrs == generic.ccrs
+            assert fast.cccrs == generic.cccrs
+            assert fast.composite_s == generic.composite_s
+            assert fast.severity == generic.severity
+
+    def test_threshold_kwargs_forwarded(self):
+        tree = st_region_tree()
+        times = {r: np.ones(8) for r in range(1, 15)}
+        times[8] = np.array([1, 1, 1, 1, 1.4, 1.4, 1.4, 1.4])
+        T, rids = make_matrix(tree, times)
+        tight = find_dissimilarity_bottlenecks(tree, T, rids,
+                                               threshold_frac=0.01)
+        loose = find_dissimilarity_bottlenecks(tree, T, rids,
+                                               threshold_frac=0.9)
+        assert tight.exists and not loose.exists
+
+    def test_input_matrix_not_mutated(self):
+        tree = st_region_tree()
+        times = {r: np.ones(8) for r in range(1, 15)}
+        times[8] = np.array([1, 1, 1, 1, 50, 50, 50, 50], dtype=float)
+        T, rids = make_matrix(tree, times)
+        before = T.copy()
+        find_dissimilarity_bottlenecks(tree, T, rids)
+        np.testing.assert_array_equal(T, before)
