@@ -18,21 +18,27 @@ from typing import Callable, Dict, List, Tuple
 import numpy as np
 
 from repro.core import (RegionTree, find_disparity_bottlenecks,
-                        find_dissimilarity_bottlenecks, optics_cluster)
+                        find_dissimilarity_bottlenecks, get_distance_backend,
+                        optics_cluster)
 from repro.core.roughset import DecisionTable
 
-# Grid points: shards m in {8..2048} x regions n in {16..512}.  The smoke
+# Grid points: shards m in {8..16384} x regions n in {16..512}.  The smoke
 # grid is the tier-1 CI lane (sub-second); default is the committed
-# baseline's grid.
+# baseline's grid.  The m >= 8192 rows exist to pin the memory-bounded
+# claim: the old eager-D² path would need 0.5-2 GB per trial sweep there.
 _MN_SMOKE = [(8, 16), (32, 16)]
 _MN_DEFAULT = [(m, n)
                for m in (8, 32, 128, 512, 2048)
-               for n in (16, 64, 128, 512)]
+               for n in (16, 64, 128, 512)] + \
+              [(8192, 64), (8192, 128), (16384, 64), (16384, 128)]
+# Distance-backend seed-row fetches (8 seeds, the shape Algorithm 2's
+# lockstep rounds issue); jax/pallas rows appear when jax imports.
+_SEEDROWS = [(2048, 128), (16384, 128)]
 GRIDS: Dict[str, Dict[str, list]] = {
     "smoke": {"mn": _MN_SMOKE, "disparity_n": [16, 64],
-              "reducts_attrs": [5, 8]},
+              "reducts_attrs": [5, 8], "seedrows": []},
     "default": {"mn": _MN_DEFAULT, "disparity_n": [16, 64, 128, 512],
-                "reducts_attrs": [5, 10, 14]},
+                "reducts_attrs": [5, 10, 14], "seedrows": _SEEDROWS},
 }
 
 
@@ -77,6 +83,7 @@ def reducts_workload(n_attrs: int, n_rows: int = 24,
 
 
 def _best_of(fn: Callable[[], object], repeat: int) -> float:
+    fn()      # untimed warmup: first-touch page faults, BLAS spin-up
     best = float("inf")
     for _ in range(repeat):
         t0 = time.perf_counter()
@@ -120,7 +127,33 @@ def run_grid(grid: str = "default", repeat: int = 3,
             "attrs": a,
             "seconds": _best_of(table.reducts, repeat)}
 
+    for m, n in spec.get("seedrows", ()):
+        W = cluster_workload(m, n, seed)
+        sq = np.einsum("ij,ij->i", W, W)
+        for backend in _seedrow_backends():
+            be = get_distance_backend(backend)
+            handle = be.prepare(W, sq)
+            idx = list(range(8))
+            be.seed_rows(handle, idx)      # warm (jit/pallas compile)
+            entry = {
+                "m": m, "n": n,
+                "seconds": _best_of(
+                    lambda: be.seed_rows(handle, idx), repeat)}
+            if backend != "numpy":
+                # Lets run_bench.py --check skip (not fail on) these
+                # entries on machines without jax.
+                entry["requires"] = "jax"
+            entries[f"seedrows/m{m}/n{n}/{backend}"] = entry
+
     return entries
+
+
+def _seedrow_backends() -> List[str]:
+    try:
+        import jax  # noqa: F401
+        return ["numpy", "jax", "pallas"]
+    except ImportError:
+        return ["numpy"]
 
 
 def all_rows() -> List[Tuple[str, float, str]]:

@@ -12,7 +12,12 @@ baseline time is below ``--min-seconds`` are reported but never fail the
 check — micro-entries are timer noise, not signal.  Timings are
 best-of-``--repeat`` wall clock, so the gate is meaningful on an otherwise
 idle machine (CI runs the smoke grid; the committed default-grid baseline
-documents the reference machine's trajectory).
+documents the reference machine's trajectory).  Best-of-5 with an untimed
+warmup pass; the default factor (2x) and noise floor (2 ms) are
+calibrated to the observed same-code jitter of a small shared container
+(CPU-steal episodes push even 30 ms entries past 1.5x run-to-run) — a
+real algorithmic regression on the entries this gate protects shows up
+well past 2x.
 """
 from __future__ import annotations
 
@@ -27,21 +32,33 @@ import time
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
+def _requirement_met(requires) -> bool:
+    """An entry's ``requires`` is an importable module name (or None)."""
+    if not requires:
+        return True
+    try:
+        __import__(requires)
+        return True
+    except ImportError:
+        return False
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description=__doc__,
         formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--grid", choices=("smoke", "default"), default="default")
-    ap.add_argument("--repeat", type=int, default=3)
+    ap.add_argument("--repeat", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None,
                     help="write results JSON here (e.g. BENCH_analyzer.json)")
     ap.add_argument("--check", metavar="BASELINE", default=None,
                     help="compare against a committed baseline JSON; exit "
                          "nonzero on regression")
-    ap.add_argument("--factor", type=float, default=1.5,
-                    help="regression threshold for --check (default 1.5x)")
-    ap.add_argument("--min-seconds", type=float, default=1e-3,
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="regression threshold for --check (default 2x, "
+                         "calibrated to shared-container jitter)")
+    ap.add_argument("--min-seconds", type=float, default=2e-3,
                     help="baseline entries faster than this never fail "
                          "--check (timer noise floor)")
     args = ap.parse_args(argv)
@@ -78,6 +95,17 @@ def main(argv=None) -> int:
 
     base_entries = baseline.get("entries", {})
     missing = sorted(set(base_entries) - set(entries))
+    # Baseline entries that declare a requirement this machine cannot
+    # meet (e.g. jax-backed seedrows on a numpy-only install) are
+    # skipped, not failed — the gate must stay usable everywhere.
+    skipped = [n for n in missing
+               if not _requirement_met(base_entries[n].get("requires"))]
+    if skipped:
+        missing = [n for n in missing if n not in set(skipped)]
+        print(f"skipping {len(skipped)} baseline entries with unmet "
+              f"requirements: {skipped}")
+        base_entries = {n: e for n, e in base_entries.items()
+                        if n not in set(skipped)}
     if missing:
         print(f"baseline entries not produced by this run: {missing}",
               file=sys.stderr)

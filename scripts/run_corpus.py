@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import argparse
 import sys
+import time
 
 
 def main(argv=None) -> int:
@@ -39,22 +40,26 @@ def main(argv=None) -> int:
                   f"{e.description}")
         return 0
 
-    results = [run_entry_robust(e, seed=args.seed) for e in entries]
+    results = []
+    for e in entries:
+        t0 = time.perf_counter()
+        r = run_entry_robust(e, seed=args.seed)
+        results.append((r, time.perf_counter() - t0))
     if not results:
         print("no entries selected", file=sys.stderr)
         return 2
-    wname = max(len(r.entry.name) for r in results) + 2
+    wname = max(len(r.entry.name) for r, _ in results) + 2
     print(f"{'entry':{wname}s} {'kind':13s} {'prec':>6s} {'recall':>6s} "
-          f"{'causes':>6s}  status")
-    print("-" * (wname + 44))
+          f"{'causes':>6s} {'wall_s':>7s}  status")
+    print("-" * (wname + 52))
     failures = 0
-    for r in results:
+    for r, wall in results:
         status = "ok" if r.passed else "FAIL"
         if not r.passed:
             failures += 1
         print(f"{r.entry.name:{wname}s} {r.entry.truth.kind:13s} "
-              f"{r.precision:6.2f} {r.recall:6.2f} {r.cause_recall:6.2f}"
-              f"  {status}")
+              f"{r.precision:6.2f} {r.recall:6.2f} {r.cause_recall:6.2f} "
+              f"{wall:7.3f}  {status}")
         if r.missed:
             print(f"{'':{wname}s}   missed: {sorted(r.missed)}")
         if not r.passed and r.spurious:
@@ -64,7 +69,7 @@ def main(argv=None) -> int:
             print(f"{'':{wname}s}   causes wanted {sorted(want)}, "
                   f"got {sorted(r.causes_found)} at the planted paths "
                   f"(globally: {sorted(r.verdict.cause_attributes)})")
-    print("-" * (wname + 44))
+    print("-" * (wname + 52))
     print(f"{len(results) - failures}/{len(results)} entries passed "
           f"(seed {args.seed})")
     return 1 if failures else 0

@@ -1,0 +1,66 @@
+#!/usr/bin/env python
+"""Dump full analyzer verdicts for every *synthetic* corpus entry to JSON.
+
+    PYTHONPATH=src python scripts/snapshot_verdicts.py out.json [--seed N]
+
+The corpus gate (scripts/run_corpus.py) only scores pass/fail; this dump
+captures everything a verdict contains — partitions, CCR/CCCR paths, cause
+attributes, per-path causes, dissimilarity severity, composite_s, disparity
+severities — so a hot-path change can be proven output-preserving by
+diffing two snapshots.  Runtime-backend entries are wall-clock noisy and
+are excluded.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def snapshot(seed: int) -> dict:
+    from repro.core import AutoAnalyzer
+    from repro.scenarios import corpus_entries
+
+    out = {}
+    for entry in corpus_entries(backend="synthetic"):
+        tree, collector = entry.build(seed)
+        analyzer = AutoAnalyzer(tree, **dict(entry.analyzer_kw))
+        res = analyzer.analyze_collector(collector)
+        v = res.verdict
+        out[entry.name] = {
+            "dissimilar": v.dissimilar,
+            "dissimilarity_paths": sorted(v.dissimilarity_paths),
+            "dissimilarity_ccr_paths": sorted(v.dissimilarity_ccr_paths),
+            "disparity_paths": sorted(v.disparity_paths),
+            "disparity_ccr_paths": sorted(v.disparity_ccr_paths),
+            "cause_attributes": sorted(v.cause_attributes),
+            "dissimilarity_cause_attributes":
+                sorted(v.dissimilarity_cause_attributes),
+            "per_path_causes": [[p, list(a)] for p, a in v.per_path_causes],
+            "dissimilarity_severity": res.dissimilarity.severity,
+            "composite_s": res.dissimilarity.composite_s,
+            "baseline_n_clusters": res.dissimilarity.baseline.n_clusters,
+            "baseline_partition": [list(g) for g in
+                                   res.dissimilarity.baseline
+                                   .partition_signature],
+            "disparity_severities": {str(k): int(s) for k, s in
+                                     sorted(res.disparity.severities.items())},
+        }
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("out")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    doc = snapshot(args.seed)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out} ({len(doc)} entries)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,9 +11,10 @@ Public API:
 """
 from .analyzer import (ATTRIBUTE_MEANING, AnalysisResult, AutoAnalyzer,
                        Verdict)
-from .clustering import (HIGH, LOW, MEDIUM, SEVERITY_NAMES, VERY_HIGH,
-                         VERY_LOW, ClusterResult, IncrementalClusterState,
-                         dissimilarity_severity, is_similar, kmeans_1d,
+from .clustering import (DISTANCE_BACKENDS, HIGH, LOW, MEDIUM,
+                         SEVERITY_NAMES, VERY_HIGH, VERY_LOW, ClusterResult,
+                         IncrementalClusterState, dissimilarity_severity,
+                         get_distance_backend, is_similar, kmeans_1d,
                          kmeans_severity, optics_cluster)
 from .collector import (RegionBehavior, SyntheticWorkload, TimedRegionRunner,
                         static_metrics_from_costs)

@@ -92,7 +92,8 @@ class AutoAnalyzer:
                  disparity_metric: str = "crnm",
                  attributes: Sequence[str] = tuple(DECISION_ATTRIBUTES),
                  peak_flops_per_s: Optional[float] = None,
-                 threshold_frac: float = 0.10):
+                 threshold_frac: float = 0.10,
+                 distance_backend: str = "numpy"):
         self.tree = tree
         self.similarity_metric = similarity_metric
         self.disparity_metric = disparity_metric
@@ -102,9 +103,14 @@ class AutoAnalyzer:
         # norm; the paper's 10% suits low-noise collection, runtime
         # (wall-clock) collection wants a wider band.
         self.threshold_frac = threshold_frac
+        # Distance backend for the clustering passes: "numpy" (bit-exact
+        # float64 default), "jax", or "pallas" (accelerator route) — see
+        # repro.core.clustering.get_distance_backend.
+        self.distance_backend = distance_backend
 
     def _cluster(self, vectors) -> ClusterResult:
-        return optics_cluster(vectors, threshold_frac=self.threshold_frac)
+        return optics_cluster(vectors, threshold_frac=self.threshold_frac,
+                              backend=self.distance_backend)
 
     # -- passes -----------------------------------------------------------
     def analyze(self, rm: RegionMetrics) -> AnalysisResult:
@@ -189,7 +195,8 @@ class AutoAnalyzer:
         # Passing the OPTICS parameters (rather than a cluster_fn closure)
         # selects the incremental-D² fast path of Algorithm 2.
         return find_dissimilarity_bottlenecks(
-            self.tree, T, rids, threshold_frac=self.threshold_frac)
+            self.tree, T, rids, threshold_frac=self.threshold_frac,
+            backend=self.distance_backend)
 
     def _disparity_values(self, rm: RegionMetrics,
                           rids: List[int]) -> np.ndarray:

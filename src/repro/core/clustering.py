@@ -12,17 +12,25 @@ Two deliberately *simple* (lightweight) algorithms:
   to detect **disparity** bottlenecks, mapping regions to severity bands
   very-low(0) .. very-high(4).
 
-Both are vectorized: the OPTICS pass runs over a precomputed pairwise
-squared-distance matrix (blocked ``(a-b)² = a²+b²-2ab`` Gram computation,
-no Python-level pair loops), and :class:`IncrementalClusterState` keeps
-that matrix hot across the one-column-at-a-time toggles of the paper's
-Algorithm 2 (see docs/performance.md for the update math).
+Both are vectorized and memory-bounded: the OPTICS pass never
+materializes the m×m pairwise matrix — the greedy loop only ever reads
+the squared-distance rows of its seed points, so rows are computed
+lazily from the Gram identity ``(a-b)² = a²+b²-2ab`` through a pluggable
+distance backend (:func:`get_distance_backend`: exact NumPy float64 by
+default, jitted JAX or a tiled Pallas kernel as the accelerator route).
+:class:`IncrementalClusterState` keeps the base rows hot in a small LRU
+cache across the one-column-at-a-time toggles of the paper's Algorithm 2
+and evaluates independent trials in lockstep batches
+(:meth:`IncrementalClusterState.cluster_batch`); see
+docs/performance.md for the update math and the memory model.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, List, Optional, Sequence, Tuple
+from collections import OrderedDict
+from typing import (Callable, Dict, List, Optional, Sequence,
+                    Tuple, Union)
 
 import numpy as np
 
@@ -30,9 +38,10 @@ import numpy as np
 VERY_LOW, LOW, MEDIUM, HIGH, VERY_HIGH = 0, 1, 2, 3, 4
 SEVERITY_NAMES = ["very low", "low", "medium", "high", "very high"]
 
-# Row-block size for the pairwise Gram computation: caps the dgemm working
-# set without changing the result (each block row is an independent product).
-_GRAM_BLOCK = 512
+# Trials processed per vectorized chunk inside cluster_batch: bounds the
+# transient (trials, m) tensors without changing any result (trials are
+# independent).
+_BATCH_CHUNK = 128
 
 PartitionSignature = Tuple[Tuple[int, ...], ...]
 
@@ -49,21 +58,48 @@ class ClusterResult:
     # sorted member tuples.
     _signature: Optional[PartitionSignature] = dataclasses.field(
         default=None, repr=False, compare=False)
+    # Labels canonicalized by first occurrence (cluster id = rank of the
+    # cluster's first member), built lazily and cached: the O(m) numpy
+    # form same_partition compares — Algorithm 2 calls it once per trial,
+    # so it must not build Python tuples.
+    _canonical: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def members(self, cid: int) -> List[int]:
         return [int(i) for i in np.nonzero(self.labels == cid)[0]]
 
     def sizes(self) -> List[int]:
-        return [int((self.labels == c).sum()) for c in range(self.n_clusters)]
+        return [int(c) for c in
+                np.bincount(self.labels, minlength=self.n_clusters)]
 
     @property
     def partition_signature(self) -> PartitionSignature:
         if self._signature is None:
-            groups: List[List[int]] = [[] for _ in range(self.n_clusters)]
-            for i, lab in enumerate(self.labels):
-                groups[int(lab)].append(i)
-            self._signature = tuple(sorted(tuple(g) for g in groups))
+            if self.labels.size == 0:
+                self._signature = ()
+                return self._signature
+            # Stable argsort groups members by cluster id while keeping
+            # each group's member indices ascending — no per-point loop.
+            order = np.argsort(self.labels, kind="stable")
+            bounds = np.nonzero(np.diff(self.labels[order]))[0] + 1
+            groups = np.split(order, bounds)
+            self._signature = tuple(sorted(
+                tuple(int(i) for i in g) for g in groups))
         return self._signature
+
+    @property
+    def canonical_labels(self) -> np.ndarray:
+        """Labels relabeled so cluster ids follow first-occurrence order —
+        two results describe the same unlabelled partition iff their
+        canonical label arrays are equal."""
+        if self._canonical is None:
+            _, first, inv = np.unique(self.labels, return_index=True,
+                                      return_inverse=True)
+            rank = np.empty(first.size, dtype=np.int64)
+            rank[np.argsort(first, kind="stable")] = \
+                np.arange(first.size)
+            self._canonical = rank[inv]
+        return self._canonical
 
     def same_partition(self, other: "ClusterResult") -> bool:
         """Paper §4.3: 'If the number of clusters or members of a cluster
@@ -71,26 +107,141 @@ class ClusterResult:
         unlabelled partitions (cluster ids are arbitrary)."""
         if self.n_clusters != other.n_clusters:
             return False
-        return self.partition_signature == other.partition_signature
+        return bool(np.array_equal(self.canonical_labels,
+                                   other.canonical_labels))
 
 
-def _pairwise_sq_dists(v: np.ndarray,
-                       block: int = _GRAM_BLOCK) -> Tuple[np.ndarray,
-                                                          np.ndarray]:
-    """Squared Euclidean distance matrix via the blocked Gram identity
-    ``|a-b|² = |a|² + |b|² - 2a·b``; returns ``(D², row squared norms)``.
+# -- distance backends ----------------------------------------------------
+#
+# A distance backend computes D² *seed rows*: squared Euclidean distances
+# from a handful of seed points to every point, via the Gram identity
+# ``|a-b|² = |a|² + |b|² - 2a·b``, clamped at zero.  That is the only
+# distance primitive the clustering core needs — the greedy OPTICS pass
+# reads one row per emitted cluster, never the full m×m matrix.
+#
+# Contract: ``prepare(W, sq)`` is called once per (immutable) point set
+# and returns an opaque handle; ``seed_rows(handle, idx)`` returns the
+# (len(idx), m) float64 row block.  The NumPy backend computes in exact
+# float64 (bit-for-bit with the scalar formula on integer-valued data and
+# is therefore the default the verdict tests pin); the JAX and Pallas
+# backends compute the Gram product in float32 on the accelerator — the
+# fast route for large m, validated against NumPy by the backend tests.
 
-    Negative roundoff residues are clamped to zero.  For integer-valued
-    data below 2^53 every operation here is exact, which the incremental
-    equivalence property tests rely on."""
-    sq = np.einsum("ij,ij->i", v, v)
-    m = v.shape[0]
-    D2 = np.empty((m, m), dtype=np.float64)
-    for s in range(0, m, block):
-        e = min(s + block, m)
-        D2[s:e] = sq[s:e, None] + sq[None, :] - 2.0 * (v[s:e] @ v.T)
-    np.maximum(D2, 0.0, out=D2)
-    return D2, sq
+
+class _NumpyDistanceBackend:
+    """Exact float64 seed rows (the bit-exact default)."""
+
+    name = "numpy"
+
+    def prepare(self, W: np.ndarray, sq: np.ndarray):
+        return (W, sq)
+
+    def seed_rows(self, handle, idx: Sequence[int]) -> np.ndarray:
+        W, sq = handle
+        # One gemv per seed row — always, even for multi-seed fetches: a
+        # stacked gemm computes bitwise-different rows on float data
+        # (different BLAS accumulation), and since fetched rows are
+        # LRU-cached, mixing the two would make cached values depend on
+        # fetch *history*, breaking the bit-for-bit equivalence between
+        # batched and sequential trial evaluation.  The handful of seed
+        # rows per clustering keeps the gemv loop cheap.
+        rows = np.empty((len(idx), W.shape[0]))
+        for i, p in enumerate(idx):
+            p = int(p)
+            rows[i] = sq[p] + sq - 2.0 * (W @ W[p])
+        return np.maximum(rows, 0.0)
+
+
+class _JaxDistanceBackend:
+    """Jitted JAX seed rows (float32 Gram on the default device)."""
+
+    name = "jax"
+
+    def __init__(self):
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def _rows(W, sq, idx):
+            G = W[idx] @ W.T
+            return jnp.maximum(sq[idx][:, None] + sq[None, :] - 2.0 * G,
+                               0.0)
+
+        self._jax = jax
+        self._rows = _rows
+
+    def prepare(self, W: np.ndarray, sq: np.ndarray):
+        dev = self._jax.device_put
+        return (dev(W.astype(np.float32)), dev(sq.astype(np.float32)))
+
+    def seed_rows(self, handle, idx: Sequence[int]) -> np.ndarray:
+        Wd, sqd = handle
+        ii = np.asarray(idx, dtype=np.int32)
+        # Pad the seed count to a power of two so jit traces stay bounded
+        # (duplicated seeds are sliced back off).
+        k = int(ii.size)
+        kp = 1 << max(0, (k - 1).bit_length())
+        pad = np.full(kp, ii[0], dtype=np.int32)
+        pad[:k] = ii
+        out = np.asarray(self._rows(Wd, sqd, pad)[:k], dtype=np.float64)
+        return np.maximum(out, 0.0)
+
+
+class _PallasDistanceBackend:
+    """Tiled Pallas distance kernel (src/repro/kernels/distance.py);
+    compiled on a TPU target, interpret mode elsewhere."""
+
+    name = "pallas"
+
+    def __init__(self):
+        import jax
+
+        from repro.kernels import distance as dist
+
+        self._jax = jax
+        self._dist = dist
+        self._interpret = jax.default_backend() != "tpu"
+
+    def prepare(self, W: np.ndarray, sq: np.ndarray):
+        dev = self._jax.device_put
+        return (dev(W.astype(np.float32)), dev(sq.astype(np.float32)))
+
+    def seed_rows(self, handle, idx: Sequence[int]) -> np.ndarray:
+        Wd, sqd = handle
+        ii = np.asarray(idx, dtype=np.int32)
+        k = int(ii.size)
+        kp = 1 << max(3, (k - 1).bit_length())   # sublane-friendly >= 8
+        pad = np.full(kp, ii[0], dtype=np.int32)
+        pad[:k] = ii
+        out = self._dist.seed_rows(Wd, sqd, pad,
+                                   interpret=self._interpret)
+        return np.maximum(np.asarray(out[:k], dtype=np.float64), 0.0)
+
+
+DISTANCE_BACKENDS = ("numpy", "jax", "pallas")
+_BACKEND_CACHE: Dict[str, object] = {}
+_BACKEND_FACTORIES = {
+    "numpy": _NumpyDistanceBackend,
+    "jax": _JaxDistanceBackend,
+    "pallas": _PallasDistanceBackend,
+}
+
+DistanceBackendSpec = Union[str, object]
+
+
+def get_distance_backend(backend: DistanceBackendSpec = "numpy"):
+    """Resolve a backend name (or pass through a backend instance).
+
+    Named backends are constructed once and cached; ``jax``/``pallas``
+    raise ImportError at first use when jax is unavailable."""
+    if not isinstance(backend, str):
+        return backend
+    if backend not in _BACKEND_FACTORIES:
+        raise ValueError(f"unknown distance backend {backend!r}; "
+                         f"known: {DISTANCE_BACKENDS}")
+    if backend not in _BACKEND_CACHE:
+        _BACKEND_CACHE[backend] = _BACKEND_FACTORIES[backend]()
+    return _BACKEND_CACHE[backend]
 
 
 def _expand_column_values(values, m: int, n_cols: int) -> np.ndarray:
@@ -154,6 +305,7 @@ def optics_cluster(
     threshold: Optional[float] = None,
     threshold_frac: float = 0.10,
     count_threshold: int = 1,
+    backend: DistanceBackendSpec = "numpy",
 ) -> ClusterResult:
     """Simplified OPTICS clustering (paper Algorithm 1).
 
@@ -166,25 +318,29 @@ def optics_cluster(
     count_threshold : minimum number of neighbours (beyond the seed itself)
         for the seed's neighbourhood to be confirmed as a cluster.  The
         paper's isolated points become singleton clusters either way.
+    backend : distance backend name or instance (see
+        :func:`get_distance_backend`); ``numpy`` is the bit-exact default.
     """
     v = np.asarray(vectors, dtype=np.float64)
     if v.ndim != 2:
         raise ValueError("vectors must be (m, n)")
     m = v.shape[0]
     sq = np.einsum("ij,ij->i", v, v)
+    be = get_distance_backend(backend)
+    handle = be.prepare(v, sq)
 
     def row_of(p: int) -> np.ndarray:
-        # Gram identity per seed row, computed lazily: the greedy pass only
-        # reads rows of its seed points, so a from-scratch clustering costs
+        # Seed rows computed lazily: the greedy pass only reads rows of
+        # its seed points, so a from-scratch clustering costs
         # O(#clusters · m · n) — no m×m materialization, no pair loops.
-        return np.maximum(sq[p] + sq - 2.0 * (v @ v[p]), 0.0)
+        return be.seed_rows(handle, [p])[0]
 
     return _greedy_cluster(m, row_of, sq, threshold, threshold_frac,
                            count_threshold)
 
 
 class IncrementalClusterState:
-    """Cached pairwise-D² state for Algorithm 2's column toggles.
+    """Memory-bounded pairwise-D² state for Algorithm 2's column toggles.
 
     Algorithm 2 (``find_dissimilarity_bottlenecks``) changes exactly one
     column — or one group of columns — of the (m, n) measurement matrix per
@@ -193,21 +349,34 @@ class IncrementalClusterState:
 
         D²[p,q] += (T[p,j] - T[q,j])² - (W[p,j] - W[q,j])²
 
-    per toggled column j (old values W, new values T), an O(m²) rank-1
-    delta — and the greedy pass only ever reads the D² rows of its seed
+    per toggled column j (old values W, new values T), an O(m) delta per
+    row — and the greedy pass only ever reads the D² rows of its seed
     points, so each trial clustering costs O(#clusters · m · depth).
+
+    The full m×m matrix is never materialized: base D² rows are computed
+    lazily from the pristine base matrix through the distance backend and
+    kept in a small LRU cache (``row_cache`` rows), so peak memory is
+    O(m·n + row_cache·m) instead of O(m²) — 16k shards fit in tens of MB
+    rather than 2 GB.
 
     Toggles nest as an explicit push/pop stack (the depth-walk of Algorithm
     2 restores child columns while a parent stays zeroed).  ``pop`` restores
     the exact pre-push arrays, so state never drifts across the hundreds of
-    toggles of a deep search; the base D² matrix is computed once and never
-    mutated.
+    toggles of a deep search; the cached base rows are computed against the
+    construction-time matrix and never mutated.
+
+    Independent single-push trials batch through :meth:`cluster_batch`:
+    the lockstep greedy pass fetches each round's base rows in one stacked
+    backend call and applies all per-trial deltas as one (trials, m)
+    tensor — bit-identical to push/cluster/pop per trial.
     """
 
     def __init__(self, matrix: np.ndarray,
                  threshold: Optional[float] = None,
                  threshold_frac: float = 0.10,
-                 count_threshold: int = 1):
+                 count_threshold: int = 1,
+                 backend: DistanceBackendSpec = "numpy",
+                 row_cache: int = 256):
         self._W = np.array(matrix, dtype=np.float64)
         if self._W.ndim != 2:
             raise ValueError("matrix must be (m, n)")
@@ -215,8 +384,15 @@ class IncrementalClusterState:
         self._threshold = threshold
         self._threshold_frac = threshold_frac
         self._count_threshold = count_threshold
-        self._D2, sq = _pairwise_sq_dists(self._W)
-        self._sq = sq
+        # Pristine base matrix: push/pop mutate only _W; base D² rows are
+        # always computed against _W0 and adjusted by the stack deltas.
+        self._W0 = self._W.copy()
+        self._sq0 = np.einsum("ij,ij->i", self._W0, self._W0)
+        self._sq = self._sq0
+        self._backend = get_distance_backend(backend)
+        self._handle = self._backend.prepare(self._W0, self._sq0)
+        self._rows: "OrderedDict[int, np.ndarray]" = OrderedDict()
+        self._row_cache = max(int(row_cache), 1)
         # stack of (cols, old values, installed values, saved sq) — sq is
         # replaced, not updated in place, so popping restores it
         # bit-for-bit; the installed values (not the live matrix) drive the
@@ -257,12 +433,35 @@ class IncrementalClusterState:
         self._W[:, cols] = old
         self._sq = saved_sq
 
-    def _row(self, p: int) -> np.ndarray:
-        """D² row of point p under the current matrix: base row plus the
-        per-toggle deltas, O(m · columns-toggled).  Each level contributes
-        the delta between the values it found and the values it installed;
-        levels re-toggling a column telescope (old_{k+1} == new_k)."""
-        row = self._D2[p]
+    def _ensure_base_rows(self, ps: Sequence[int]) -> None:
+        """Fetch (in one stacked backend call) and LRU-cache the base D²
+        rows of ``ps``; rows already cached are refreshed, the cache never
+        evicts a row requested this round."""
+        missing = [p for p in ps if p not in self._rows]
+        if missing:
+            rows = self._backend.seed_rows(self._handle, missing)
+            for p, row in zip(missing, rows):
+                self._rows[p] = row
+        for p in ps:
+            self._rows.move_to_end(p)
+        while len(self._rows) > max(self._row_cache, len(ps)):
+            self._rows.popitem(last=False)
+
+    def _base_row(self, p: int) -> np.ndarray:
+        """Clamped base D² row of point p (lazy + LRU).  Read-only."""
+        if p in self._rows:
+            self._rows.move_to_end(p)
+        else:
+            self._ensure_base_rows([p])
+        return self._rows[p]
+
+    def _row_raw(self, p: int) -> np.ndarray:
+        """Base D² row of p plus the per-level stack deltas, *without* the
+        final clamp (read-only when the stack is empty).  Each level
+        contributes the delta between the values it found and the values
+        it installed; levels re-toggling a column telescope
+        (old_{k+1} == new_k)."""
+        row = self._base_row(p)
         if not self._stack:
             return row
         row = row.copy()
@@ -271,6 +470,14 @@ class IncrementalClusterState:
             do = old - old[p]
             row += np.einsum("ij,ij->i", dn, dn) \
                 - np.einsum("ij,ij->i", do, do)
+        return row
+
+    def _row(self, p: int) -> np.ndarray:
+        """D² row of point p under the current matrix,
+        O(m · columns-toggled)."""
+        row = self._row_raw(p)
+        if not self._stack:
+            return row
         np.maximum(row, 0.0, out=row)
         return row
 
@@ -281,6 +488,116 @@ class IncrementalClusterState:
         return _greedy_cluster(self._m, self._row, self._sq,
                                self._threshold, self._threshold_frac,
                                self._count_threshold)
+
+    def cluster_batch(self, toggles: Sequence[Tuple[Sequence[int], object]]
+                      ) -> List[ClusterResult]:
+        """Cluster each single-push trial without mutating the state.
+
+        ``toggles`` is a sequence of ``(cols, values)`` pairs exactly as
+        :meth:`push` takes them; the result list matches
+        ``[push(c, v); cluster(); pop()]`` per trial **bit-for-bit**, but
+        the trials advance in lockstep: every greedy round fetches its
+        base D² rows once per unique seed (one stacked backend call shared
+        by all trials at that seed) and evaluates the per-trial row deltas
+        as one (trials, m) tensor instead of per-trial Python round-trips.
+        """
+        nt = len(toggles)
+        if nt == 0:
+            return []
+        m = self._m
+        # Only the toggle *descriptions* are held for all trials; the
+        # per-trial (m, w) tensors are built lazily inside each chunked
+        # round, so transient memory stays O(_BATCH_CHUNK · w · m) even
+        # for wide composite-window sweeps (the matrix is not mutated
+        # during the batch, so recomputation is exact).
+        cols_l: List[List[int]] = []
+        vals_l: List[Optional[object]] = []     # None == all-zero toggle
+        for cols, values in toggles:
+            cols_l.append([int(c) for c in cols])
+            zero = np.isscalar(values) and float(values) == 0.0
+            vals_l.append(None if zero else values)
+
+        labels = np.full((nt, m), -1, dtype=np.int64)
+        n_clusters = np.zeros(nt, dtype=np.int64)
+        used_thr = np.full(nt, -1.0)
+        ct = self._count_threshold
+        active = list(range(nt))
+        while active:
+            # Group this round's trials by seed so each group shares one
+            # current-stack row and one vectorized assignment pass.
+            groups: Dict[int, List[int]] = {}
+            for t in active:
+                p = int(np.argmax(labels[t] < 0))
+                groups.setdefault(p, []).append(t)
+            self._ensure_base_rows(sorted(groups))
+            for p, ts in groups.items():
+                row_p = self._row_raw(p)
+                for s0 in range(0, len(ts), _BATCH_CHUNK):
+                    chunk = ts[s0:s0 + _BATCH_CHUNK]
+                    self._batch_round(chunk, p, row_p, cols_l, vals_l,
+                                      labels, n_clusters, used_thr, ct)
+            active = [t for t in active if (labels[t] < 0).any()]
+        return [ClusterResult(labels=labels[t].copy(),
+                              n_clusters=int(n_clusters[t]),
+                              threshold=float(used_thr[t]))
+                for t in range(nt)]
+
+    def _batch_round(self, ts, p, row_p, cols_l, vals_l, labels,
+                     n_clusters, used_thr, ct) -> None:
+        """One greedy round (seed p) for the trial chunk ``ts``: assign a
+        fresh cluster per trial, exactly like the sequential greedy pass.
+
+        Each trial's delta runs through the *same* operations as the
+        sequential path — a C-order snapshot of the toggled columns
+        (exactly as ``push`` takes it: a fancy column slice is F-ordered
+        and einsum's accumulation differs by operand layout) contracted
+        by the same ``"ij,ij->i"`` einsum shape (a stacked 3-D
+        contraction accumulates in a different order).  Either ~1-ulp
+        difference near zero could flip a partition on float data.  The
+        stacking into the (trials, m) tensor happens after, for the
+        vectorized neighbourhood/assignment phase (exact integer and
+        comparison ops)."""
+        m = row_p.shape[0]
+        need_sq = self._threshold is None       # thresholds from seed norms
+        rows = np.empty((len(ts), m))
+        sqp = np.empty(len(ts))
+        for i, t in enumerate(ts):
+            old = self._W[:, cols_l[t]].copy()
+            do = old - old[p]
+            db = np.einsum("ij,ij->i", do, do)
+            if vals_l[t] is None:
+                # == einsum over the expanded zero block: exactly +0.0
+                delta = 0.0 - db
+                new = None
+            else:
+                new = _expand_column_values(vals_l[t], m, len(cols_l[t]))
+                dn = new - new[p]
+                delta = np.einsum("ij,ij->i", dn, dn) - db
+            rows[i] = row_p + delta
+            if need_sq:
+                sq_t = self._sq - np.einsum("ij,ij->i", old, old)
+                if new is not None:
+                    sq_t = sq_t + np.einsum("ij,ij->i", new, new)
+                sqp[i] = sq_t[p]
+        np.maximum(rows, 0.0, out=rows)
+        ts_arr = np.asarray(ts, dtype=np.int64)
+        if self._threshold is not None:
+            thr = np.full(len(ts), float(self._threshold))
+        else:
+            thr = np.array([self._threshold_frac *
+                            math.sqrt(max(float(s), 0.0))
+                            for s in sqp])
+        used_thr[ts_arr] = np.maximum(used_thr[ts_arr], thr)
+        sub = labels[ts_arr]                           # (k, m) copy
+        cand = (sub < 0) & (rows <= (thr * thr)[:, None])
+        cand[:, p] = False
+        counts = cand.sum(axis=1)
+        newlab = n_clusters[ts_arr]
+        assign = cand & (counts >= ct)[:, None]
+        sub = np.where(assign, newlab[:, None], sub)
+        sub[:, p] = newlab                             # seed always labeled
+        labels[ts_arr] = sub
+        n_clusters[ts_arr] += 1
 
 
 def is_similar(vectors: np.ndarray, **kw) -> bool:

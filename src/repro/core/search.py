@@ -4,24 +4,29 @@
   search over the code-region tree against the simplified-OPTICS clustering.
   Every step of the search toggles exactly one column (or one group of
   adjacent columns) of the (m, n) measurement matrix, so the default path
-  runs on an :class:`IncrementalClusterState`: the pairwise-D² matrix is
-  computed once and each toggle is an O(m²)-bounded delta instead of an
-  O(m²·n) from-scratch reclustering (docs/performance.md has the math and
-  measured speedups).
+  runs on a memory-bounded :class:`IncrementalClusterState`: base D² seed
+  rows are computed lazily (never the m×m matrix) and each toggle is an
+  O(m)-per-row delta instead of an O(m²·n) from-scratch reclustering.
+  Independent trials — the depth-1 zeroing sweep, each sibling group of
+  ``analyze_children``, each composite-window round — evaluate as one
+  lockstep batch, and trial partitions are memoized by toggle-set
+  signature so identical toggles never re-cluster (docs/performance.md
+  has the math and measured speedups).
 * :func:`find_disparity_bottlenecks` — k-means severity bands over CRNM,
   then the leaf-or-dominant refinement to CCCRs.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import (Callable, Dict, FrozenSet, List, Optional,
+                    Sequence)
 
 import numpy as np
 
 from .clustering import (HIGH, SEVERITY_NAMES, ClusterResult,
-                         IncrementalClusterState, _expand_column_values,
-                         dissimilarity_severity, kmeans_severity,
-                         optics_cluster)
+                         DistanceBackendSpec, IncrementalClusterState,
+                         _expand_column_values, dissimilarity_severity,
+                         kmeans_severity, optics_cluster)
 from .regions import CodeRegion, RegionTree
 
 
@@ -70,6 +75,81 @@ class _ScratchToggleState:
     def cluster(self) -> ClusterResult:
         return self._fn(self._W)
 
+    def cluster_batch(self, toggles) -> List[ClusterResult]:
+        """Generic-path trials: an opaque cluster_fn cannot batch, so this
+        is the sequential push/cluster/pop loop behind the same API."""
+        out = []
+        for cols, values in toggles:
+            self.push(cols, values)
+            out.append(self.cluster())
+            self.pop()
+        return out
+
+
+class _TrialEvaluator:
+    """Algorithm 2's trial driver over a toggle state.
+
+    Every matrix Algorithm 2 ever clusters is the original T with some
+    set of columns zeroed (pushes either zero columns or restore them to
+    their original T values), so that set is a complete signature of the
+    trial matrix.  The evaluator tracks it across push/pop, memoizes
+    partitions by it — identical toggle sets never re-cluster, within a
+    batch or across the search — and routes independent single-push
+    trials through the state's batched path."""
+
+    def __init__(self, state, T: np.ndarray,
+                 initially_zeroed: Sequence[int]):
+        self._state = state
+        self._T = T
+        self._zeroed = set(int(c) for c in initially_zeroed)
+        self._saved: List[set] = []
+        self._memo: Dict[FrozenSet[int], ClusterResult] = {}
+
+    def cluster(self) -> ClusterResult:
+        sig = frozenset(self._zeroed)
+        if sig not in self._memo:
+            self._memo[sig] = self._state.cluster()
+        return self._memo[sig]
+
+    def trials(self, col_groups: Sequence[Sequence[int]],
+               zero: bool) -> List[ClusterResult]:
+        """Evaluate one independent trial per column group: zero the
+        group (``zero=True``) or restore it to its original T values, on
+        top of the current stack.  Memo hits (and in-batch duplicates)
+        are served without clustering; the rest run as one batch."""
+        sigs = [frozenset(self._zeroed | set(map(int, g))) if zero
+                else frozenset(self._zeroed - set(map(int, g)))
+                for g in col_groups]
+        todo: List[int] = []
+        queued: set = set()
+        for i, sig in enumerate(sigs):
+            if sig not in self._memo and sig not in queued:
+                todo.append(i)
+                queued.add(sig)
+        if todo:
+            toggles = [(list(col_groups[i]),
+                        0.0 if zero else self._T[:, list(col_groups[i])])
+                       for i in todo]
+            for i, res in zip(todo, self._state.cluster_batch(toggles)):
+                self._memo[sigs[i]] = res
+        return [self._memo[sig] for sig in sigs]
+
+    def push_zero(self, cols: Sequence[int]) -> None:
+        cols = [int(c) for c in cols]
+        self._saved.append(set(self._zeroed))
+        self._state.push(cols, 0.0)
+        self._zeroed.update(cols)
+
+    def push_restore(self, cols: Sequence[int]) -> None:
+        cols = [int(c) for c in cols]
+        self._saved.append(set(self._zeroed))
+        self._state.push(cols, self._T[:, cols])
+        self._zeroed.difference_update(cols)
+
+    def pop(self) -> None:
+        self._state.pop()
+        self._zeroed = self._saved.pop()
+
 
 def find_dissimilarity_bottlenecks(
     tree: RegionTree,
@@ -80,6 +160,7 @@ def find_dissimilarity_bottlenecks(
     threshold: Optional[float] = None,
     threshold_frac: float = 0.10,
     count_threshold: int = 1,
+    backend: DistanceBackendSpec = "numpy",
 ) -> DissimilarityReport:
     """Algorithm 2 of the paper.
 
@@ -89,10 +170,11 @@ def find_dissimilarity_bottlenecks(
 
     With the default ``cluster_fn=None`` the simplified-OPTICS parameters
     (``threshold``/``threshold_frac``/``count_threshold``) drive the
-    incremental fast path.  Passing an explicit ``cluster_fn`` keeps the
-    generic contract — any callable mapping a matrix to a
-    :class:`ClusterResult` — at the cost of a from-scratch clustering per
-    toggle.
+    memory-bounded incremental fast path, with distances computed by
+    ``backend`` (:func:`repro.core.clustering.get_distance_backend`).
+    Passing an explicit ``cluster_fn`` keeps the generic contract — any
+    callable mapping a matrix to a :class:`ClusterResult` — at the cost
+    of a from-scratch clustering per trial.
     """
     T = np.asarray(T, dtype=np.float64)
     col = {rid: j for j, rid in enumerate(region_ids)}
@@ -104,72 +186,75 @@ def find_dissimilarity_bottlenecks(
 
     # Lines 3-9: zero depth>1 columns, baseline clustering.
     work = T.copy()
-    for rid, r in regions.items():
-        if r.depth > 1:
-            work[:, col[rid]] = 0.0
+    zeroed0 = [col[rid] for rid, r in regions.items() if r.depth > 1]
+    work[:, zeroed0] = 0.0
 
     if cluster_fn is not None:
         state = _ScratchToggleState(work, cluster_fn)
     else:
         state = IncrementalClusterState(work, threshold=threshold,
                                         threshold_frac=threshold_frac,
-                                        count_threshold=count_threshold)
-    baseline = state.cluster()
-    severity = dissimilarity_severity(baseline, work)
+                                        count_threshold=count_threshold,
+                                        backend=backend)
+    ev = _TrialEvaluator(state, T, zeroed0)
+    baseline = ev.cluster()
     if baseline.n_clusters == 1:
         return DissimilarityReport(False, baseline, [], [], 0.0)
+    # Only reported on the bottleneck path, so only computed here.
+    severity = dissimilarity_severity(baseline, work)
 
     ccrs: List[int] = []
     cccrs: List[int] = []
 
-    def trial_changes_baseline() -> bool:
-        return not state.cluster().same_partition(baseline)
-
     def analyze_children(parent: CodeRegion) -> bool:
-        """Restore each child alone; if the clustering equals the baseline
-        (the dissimilarity is reproduced), the child is a CCR.  Returns True
-        if any child is a CCR."""
+        """Restore each child alone (one batched sibling-group round); if
+        the clustering equals the baseline (the dissimilarity is
+        reproduced), the child is a CCR.  Returns True if any child is a
+        CCR."""
+        kids = [c for c in parent.children if c.region_id in col]
+        if not kids:
+            return False
+        results = ev.trials([[col[c.region_id]] for c in kids], zero=False)
         any_child = False
-        for child in parent.children:
-            if child.region_id not in col:
-                continue
-            k = col[child.region_id]
-            state.push([k], T[:, k])
-            if state.cluster().same_partition(baseline):
+        for child, res in zip(kids, results):
+            if res.same_partition(baseline):
                 ccrs.append(child.region_id)
                 any_child = True
+                ev.push_restore([col[child.region_id]])
                 deeper = analyze_children(child)
+                ev.pop()
                 if child.is_leaf or not deeper:
                     cccrs.append(child.region_id)
-            state.pop()
         return any_child
 
-    # Lines 10-30: zero each depth-1 region; a change in the clustering
-    # result marks it as a CCR.
-    for r in depth1():
-        state.push([col[r.region_id]], 0.0)
-        if trial_changes_baseline():
+    # Lines 10-30: zero each depth-1 region — one batched sweep; a change
+    # in the clustering result marks it as a CCR.
+    d1 = depth1()
+    d1_results = ev.trials([[col[r.region_id]] for r in d1], zero=True)
+    for r, res in zip(d1, d1_results):
+        if not res.same_partition(baseline):
             ccrs.append(r.region_id)
+            ev.push_zero([col[r.region_id]])
             had_child_ccr = analyze_children(r)
+            ev.pop()
             if r.is_leaf or not had_child_ccr:
                 cccrs.append(r.region_id)
-        state.pop()
 
     s = 1
     if not ccrs:
         # Lines 31-37: combine s adjacent 1-code regions into composite
-        # regions and repeat.
-        d1 = depth1()
+        # regions and repeat, one batched round per window width.
         rmax = max_composite if max_composite is not None else len(d1) - 1
         s = 2
         while not ccrs and s <= max(rmax, 2) and s <= len(d1):
-            for start in range(0, len(d1) - s + 1):
-                group = d1[start:start + s]
-                state.push([col[g.region_id] for g in group], 0.0)
-                if trial_changes_baseline():
-                    ccrs.extend(g.region_id for g in group)
-                    cccrs.extend(g.region_id for g in group)
-                state.pop()
+            windows = [d1[start:start + s]
+                       for start in range(0, len(d1) - s + 1)]
+            wres = ev.trials([[col[g.region_id] for g in w]
+                              for w in windows], zero=True)
+            for w, res in zip(windows, wres):
+                if not res.same_partition(baseline):
+                    ccrs.extend(g.region_id for g in w)
+                    cccrs.extend(g.region_id for g in w)
             s += 1
         s -= 1
 

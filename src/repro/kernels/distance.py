@@ -1,0 +1,77 @@
+"""Tiled Pallas kernel for batched pairwise-distance seed rows.
+
+The AutoAnalyzer clustering core (``repro.core.clustering``) only ever
+needs squared Euclidean distances from a handful of *seed* points to all
+m points — never the full m×m matrix.  This kernel computes one
+(seeds, block_m) output tile per grid step from the Gram identity
+
+    D²[s, q] = |W_s|² + |W_q|² − 2·W_s·W_q
+
+with the seed block resident in VMEM across the whole sweep and the
+point matrix streamed through in ``block_m``-row tiles, so VMEM holds
+O(seeds·n + block_m·n) floats regardless of m.  Compiled on a TPU
+target; interpret mode elsewhere (same kernel body, correctness only).
+
+Inputs are zero-padded to tile-friendly shapes by :func:`seed_rows`
+(zero rows/columns contribute nothing to the Gram product and padded
+output columns are sliced off), so callers can pass any (m, n).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _kernel(ws_ref, sqs_ref, w_ref, sq_ref, o_ref):
+    g = jnp.dot(ws_ref[...], w_ref[...].T,
+                preferred_element_type=jnp.float32)
+    d = sqs_ref[...] + sq_ref[...] - 2.0 * g
+    o_ref[...] = jnp.maximum(d, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def seed_rows(points, sq, idx, *, block_m: int = 512,
+              interpret: bool = False):
+    """Squared-distance rows of ``points[idx]`` against all points.
+
+    points : (m, n) float32 device array.
+    sq     : (m,) row squared norms of ``points``.
+    idx    : (k,) int32 seed indices.
+    Returns (k, m) float32, clamped at zero.
+    """
+    m, n = points.shape
+    k = idx.shape[0]
+    seeds = jnp.take(points, idx, axis=0)
+    sqs = jnp.take(sq, idx)
+
+    kp = _round_up(max(k, 8), 8)
+    np_ = _round_up(max(n, 1), 128)
+    bm = min(block_m, _round_up(max(m, 1), 128))
+    mp = _round_up(max(m, 1), bm)
+
+    seeds_p = jnp.zeros((kp, np_), points.dtype).at[:k, :n].set(seeds)
+    sqs_p = jnp.zeros((kp, 1), points.dtype).at[:k, 0].set(sqs)
+    points_p = jnp.zeros((mp, np_), points.dtype).at[:m, :n].set(points)
+    sq_p = jnp.zeros((1, mp), points.dtype).at[0, :m].set(sq)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((kp, np_), lambda i: (0, 0)),
+            pl.BlockSpec((kp, 1), lambda i: (0, 0)),
+            pl.BlockSpec((bm, np_), lambda i: (i, 0)),
+            pl.BlockSpec((1, bm), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((kp, bm), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((kp, mp), points.dtype),
+        interpret=interpret,
+    )(seeds_p, sqs_p, points_p, sq_p)
+    return out[:k, :m]

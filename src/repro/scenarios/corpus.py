@@ -444,6 +444,20 @@ register_entry(CorpusEntry(
 ))
 
 register_entry(CorpusEntry(
+    name="st/checkpoint-stall-cr10",
+    app="st", backend="synthetic",
+    description="Rank 2 owns the checkpoint write leg in cr10: an 80GB "
+                "host-I/O burst stalls it for 5s of wall clock (CPU "
+                "clock untouched)",
+    build=_synthetic(baseline_st,
+                     F.CheckpointStall("ST/cr10", proc=2,
+                                       extra_bytes=80e9, stall=5.0)),
+    truth=GroundTruth("dissimilarity", frozenset({"ST/cr10"}),
+                      frozenset({HOST_BYTES})),
+    analyzer_kw=(("similarity_metric", WALL_TIME),),
+))
+
+register_entry(CorpusEntry(
     name="st/combined-straggler-io",
     app="st", backend="synthetic",
     description="Straggler in cr5 AND an I/O hotspot in cr8 at once",

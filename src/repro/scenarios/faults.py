@@ -230,6 +230,38 @@ class CollectiveStraggler:
 
 
 @dataclasses.dataclass(frozen=True)
+class CheckpointStall:
+    """One shard flushes the checkpoint (the ROADMAP's checkpoint-stall
+    archetype): a ``extra_bytes`` host-I/O burst lands on a single rank —
+    the one that owns the write leg this step — which stalls for
+    ``stall`` seconds of wall clock while the data drains.  Waiting, not
+    compute: the CPU clock is untouched, so corpus entries pair this
+    with ``similarity_metric=wall_time``; the host-traffic spike is what
+    surfaces ``host_bytes`` as the root cause in the Fig. 4 table."""
+
+    region: str
+    proc: int
+    extra_bytes: float = 80e9
+    stall: float = 5.0
+    kind: ClassVar[str] = DISSIMILARITY
+    causes: ClassVar[FrozenSet[str]] = frozenset({HOST_BYTES})
+
+    def apply(self, tree: RegionTree, rm: RegionMetrics,
+              rng: np.random.Generator) -> None:
+        m = rm.n_processes
+        burst = np.zeros(m)
+        burst[self.proc] = self.extra_bytes
+        waits = np.zeros(m)
+        waits[self.proc] = self.stall
+        _add_cells(tree, rm, self.region, HOST_BYTES, burst)
+        _add_cells(tree, rm, self.region, WALL_TIME, waits)
+
+    @property
+    def paths(self) -> Tuple[str, ...]:
+        return (self.region,)
+
+
+@dataclasses.dataclass(frozen=True)
 class CacheThrash:
     """A region starts missing in cache: HBM traffic per flop inflates by
     ``byte_factor`` and the same flops take ``slowdown``× longer on every

@@ -59,6 +59,23 @@ def test_check_flags_regression(tmp_path):
     assert "REGRESSION" in r2.stdout
 
 
+def test_check_skips_entries_with_unmet_requirements(tmp_path):
+    """Baseline entries whose `requires` module is unavailable are
+    skipped, not treated as missing (the committed baseline carries
+    jax/pallas seedrows rows a numpy-only machine cannot produce)."""
+    out = tmp_path / "bench.json"
+    r = _run_bench("--grid", "smoke", "--repeat", "1", "--out", str(out))
+    assert r.returncode == 0, r.stderr
+    doc = json.loads(out.read_text())
+    doc["entries"]["seedrows/m8/n4/ghost"] = {
+        "m": 8, "n": 4, "seconds": 1.0,
+        "requires": "definitely_not_an_importable_module"}
+    out.write_text(json.dumps(doc))
+    r2 = _run_bench("--check", str(out))
+    assert r2.returncode == 0, r2.stdout + r2.stderr
+    assert "unmet requirements" in r2.stdout
+
+
 def test_check_rejects_missing_entries(tmp_path):
     out = tmp_path / "bench.json"
     r = _run_bench("--grid", "smoke", "--repeat", "1", "--out", str(out))

@@ -1,0 +1,118 @@
+"""The pluggable distance-backend seam: NumPy (bit-exact default), jitted
+JAX, and the tiled Pallas kernel must agree on seed rows — NumPy exactly
+against the brute-force definition, the float32 accelerator routes to
+tolerance — and all three must produce the same partitions end-to-end on
+separated data (the corpus-scale margins are orders of magnitude wider
+than f32 roundoff)."""
+import numpy as np
+import pytest
+
+from repro.core import (AutoAnalyzer, IncrementalClusterState,
+                        find_dissimilarity_bottlenecks, get_distance_backend,
+                        optics_cluster)
+from repro.core.clustering import DISTANCE_BACKENDS
+
+
+def _brute_rows(W, idx):
+    return np.array([[((W[p] - W[q]) ** 2).sum() for q in range(W.shape[0])]
+                     for p in idx])
+
+
+def _workload(m=40, n=6, seed=0):
+    rng = np.random.default_rng(seed)
+    W = 100.0 + rng.random((m, n))
+    W[: m // 4] *= 7.0          # well-separated straggler block
+    return W
+
+
+class TestNumpyBackend:
+    @pytest.mark.parametrize("k", [1, 2, 5])
+    def test_rows_match_brute_force(self, k):
+        rng = np.random.default_rng(1)
+        W = rng.integers(0, 1024, (30, 7)).astype(np.float64)
+        sq = np.einsum("ij,ij->i", W, W)
+        be = get_distance_backend("numpy")
+        idx = [0, 11, 29, 5, 17][:k]
+        rows = be.seed_rows(be.prepare(W, sq), idx)
+        # integer-exact data: the Gram identity is exact in float64
+        np.testing.assert_array_equal(rows, _brute_rows(W, idx))
+
+    def test_unknown_backend_rejected(self):
+        with pytest.raises(ValueError, match="unknown distance backend"):
+            get_distance_backend("cuda")
+
+    def test_instance_passthrough(self):
+        be = get_distance_backend("numpy")
+        assert get_distance_backend(be) is be
+
+    def test_registry_names(self):
+        assert set(DISTANCE_BACKENDS) == {"numpy", "jax", "pallas"}
+
+
+@pytest.mark.parametrize("name", ["jax", "pallas"])
+class TestAcceleratorBackends:
+    @pytest.fixture(autouse=True)
+    def _need_jax(self):
+        pytest.importorskip("jax")
+
+    @pytest.mark.parametrize("k", [1, 3, 9])
+    def test_rows_match_numpy(self, name, k):
+        W = _workload()
+        sq = np.einsum("ij,ij->i", W, W)
+        ref = get_distance_backend("numpy")
+        want = ref.seed_rows(ref.prepare(W, sq), list(range(k)))
+        be = get_distance_backend(name)
+        got = be.seed_rows(be.prepare(W, sq), list(range(k)))
+        assert got.shape == want.shape
+        assert got.dtype == np.float64
+        # The f32 Gram identity's absolute error scales with the squared
+        # norms (cancellation): ~eps_f32 · |a|² — the contract the
+        # clustering thresholds (10% of the norm, squared) sit far above.
+        np.testing.assert_allclose(got, want, rtol=1e-4,
+                                   atol=4e-6 * float(sq.max()))
+
+    def test_optics_partition_matches_numpy(self, name):
+        W = _workload()
+        assert optics_cluster(W, backend=name).same_partition(
+            optics_cluster(W, backend="numpy"))
+
+    def test_incremental_state_on_backend(self, name):
+        W = _workload(seed=3)
+        a = IncrementalClusterState(W, backend=name)
+        b = IncrementalClusterState(W)
+        assert a.cluster().same_partition(b.cluster())
+        a.push([2], 0.0)
+        b.push([2], 0.0)
+        assert a.cluster().same_partition(b.cluster())
+        (ra,), (rb,) = a.cluster_batch([([1], 0.0)]), \
+            b.cluster_batch([([1], 0.0)])
+        assert ra.same_partition(rb)
+
+    def test_algorithm2_report_matches_numpy(self, name):
+        from repro.core import RegionTree
+        tree = RegionTree("be")
+        n = 6
+        for j in range(1, n + 1):
+            tree.add(f"cr{j}")
+        rng = np.random.default_rng(9)
+        T = 10.0 + 0.01 * rng.random((16, n))
+        T[:4, 2] *= 8.0
+        rids = list(range(1, n + 1))
+        fast = find_dissimilarity_bottlenecks(tree, T, rids, backend=name)
+        ref = find_dissimilarity_bottlenecks(tree, T, rids)
+        assert fast.exists == ref.exists
+        assert fast.ccrs == ref.ccrs
+        assert fast.cccrs == ref.cccrs
+        assert fast.composite_s == ref.composite_s
+
+
+class TestAnalyzerWiring:
+    def test_analyzer_accepts_backend(self):
+        pytest.importorskip("jax")
+        from repro.scenarios.corpus import CORPUS
+        entry = CORPUS["st/compute-straggler-cr5"]
+        tree, collector = entry.build(0)
+        rm = collector.collect()
+        ref = AutoAnalyzer(tree).analyze(rm)
+        jx = AutoAnalyzer(tree, distance_backend="jax").analyze(rm)
+        assert jx.verdict == ref.verdict

@@ -176,9 +176,21 @@ class TestPartitionSignature:
         a = optics_cluster(v)
         b = optics_cluster(v[::-1])
         assert a.same_partition(b)
-        # cached after first use
-        assert a._signature is not None
+        # comparison runs on the cached canonical labels, not the tuple
+        # signature (which stays lazy until explicitly requested)
+        assert a._canonical is not None
+        assert a._signature is None
         assert a.partition_signature is a.partition_signature
+        assert a._signature is not None
+
+    def test_signature_matches_canonical_comparison(self):
+        rng = np.random.default_rng(11)
+        for _ in range(40):
+            x = optics_cluster(rng.integers(0, 4, (10, 3)).astype(float))
+            y = optics_cluster(rng.integers(0, 4, (10, 3)).astype(float))
+            by_sig = (x.n_clusters == y.n_clusters
+                      and x.partition_signature == y.partition_signature)
+            assert by_sig == x.same_partition(y)
 
     def test_different_partitions_differ(self):
         a = optics_cluster(np.array([[0.0], [0.0], [9.0]]))

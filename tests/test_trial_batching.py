@@ -1,0 +1,348 @@
+"""Equivalence and memory properties of the memory-bounded, trial-batched
+Algorithm 2 core.
+
+Three families of proofs:
+
+* the lazy-row :class:`IncrementalClusterState` (no m×m materialization)
+  must produce partitions bit-identical to a *full-matrix* reference —
+  the pre-change eager-D² implementation, kept verbatim here as the
+  oracle — under random nested toggle scripts on integer-exact matrices
+  (every operation exact in float64, so equality is bitwise);
+
+* :meth:`IncrementalClusterState.cluster_batch` must match the
+  sequential ``push; cluster; pop`` evaluation of the same trials
+  bit-for-bit, for zeroing and restoring toggles, single columns and
+  groups, from clean and from pushed-stack states;
+
+* peak memory stays far below the m×m wall (tracemalloc bound), and the
+  toggle-set memoization in Algorithm 2 never re-clusters an identical
+  trial matrix.
+
+All sweeps are seeded numpy-rng (hypothesis is not required).
+"""
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro.core import IncrementalClusterState, optics_cluster
+from repro.core.clustering import _greedy_cluster
+from repro.core.search import _ScratchToggleState, _TrialEvaluator
+
+_VMAX = 1024
+
+
+class _FullMatrixReference:
+    """The pre-change eager-D² incremental state, kept as the equivalence
+    oracle: materializes the full m×m matrix once and applies push/pop
+    deltas over it, exactly as the seed implementation did."""
+
+    def __init__(self, matrix, threshold=None, threshold_frac=0.10,
+                 count_threshold=1):
+        self._W = np.array(matrix, dtype=np.float64)
+        self._m = self._W.shape[0]
+        self._threshold = threshold
+        self._threshold_frac = threshold_frac
+        self._count_threshold = count_threshold
+        sq = np.einsum("ij,ij->i", self._W, self._W)
+        m = self._m
+        D2 = np.empty((m, m), dtype=np.float64)
+        for s in range(0, m, 512):
+            e = min(s + 512, m)
+            D2[s:e] = sq[s:e, None] + sq[None, :] \
+                - 2.0 * (self._W[s:e] @ self._W.T)
+        np.maximum(D2, 0.0, out=D2)
+        self._D2, self._sq = D2, sq
+        self._stack = []
+
+    def push(self, cols, values):
+        cols = [int(c) for c in cols]
+        old = self._W[:, cols].copy()
+        vals = np.asarray(values, dtype=np.float64)
+        if vals.ndim == 1:
+            vals = vals[:, None]
+        new = np.empty((self._m, len(cols)), dtype=np.float64)
+        new[...] = vals
+        saved_sq = self._sq
+        self._sq = saved_sq - np.einsum("ij,ij->i", old, old) \
+            + np.einsum("ij,ij->i", new, new)
+        self._W[:, cols] = new
+        self._stack.append((cols, old, new, saved_sq))
+
+    def pop(self):
+        cols, old, _new, saved_sq = self._stack.pop()
+        self._W[:, cols] = old
+        self._sq = saved_sq
+
+    def _row(self, p):
+        row = self._D2[p]
+        if not self._stack:
+            return row
+        row = row.copy()
+        for cols, old, new, _ in self._stack:
+            dn = new - new[p]
+            do = old - old[p]
+            row += np.einsum("ij,ij->i", dn, dn) \
+                - np.einsum("ij,ij->i", do, do)
+        np.maximum(row, 0.0, out=row)
+        return row
+
+    def cluster(self):
+        return _greedy_cluster(self._m, self._row, self._sq,
+                               self._threshold, self._threshold_frac,
+                               self._count_threshold)
+
+
+def _random_matrix(rng, max_m=16, max_n=10):
+    m = int(rng.integers(2, max_m + 1))
+    n = int(rng.integers(1, max_n + 1))
+    T = rng.integers(0, _VMAX + 1, size=(m, n)).astype(np.float64)
+    if rng.random() < 0.4 and m >= 3:
+        T[int(rng.integers(0, m))] = T[int(rng.integers(0, m))]
+    if rng.random() < 0.3:
+        T[int(rng.integers(0, m))] = 0.0
+    return T
+
+
+def _random_toggles(rng, n, max_toggles=5):
+    steps = []
+    for _ in range(int(rng.integers(0, max_toggles + 1))):
+        start = int(rng.integers(0, n))
+        width = int(rng.integers(1, min(3, n - start) + 1))
+        steps.append((list(range(start, start + width)),
+                      bool(rng.random() < 0.7)))
+    return steps
+
+
+def _random_trials(rng, T, max_trials=8):
+    """Uniform-width single-push trial set, zeroing or restoring."""
+    n = T.shape[1]
+    width = int(rng.integers(1, min(3, n) + 1))
+    zero = bool(rng.random() < 0.6)
+    trials = []
+    for _ in range(int(rng.integers(1, max_trials + 1))):
+        start = int(rng.integers(0, n - width + 1))
+        cols = list(range(start, start + width))
+        trials.append((cols, 0.0 if zero else T[:, cols]))
+    return trials
+
+
+def assert_same_partition(a, b):
+    assert a.n_clusters == b.n_clusters
+    assert a.partition_signature == b.partition_signature
+
+
+class TestLazyRowsMatchFullMatrix:
+    @pytest.mark.parametrize("seed", range(60))
+    def test_toggle_script_matches_full_matrix(self, seed):
+        """The memory-bounded state and the eager-D² oracle must agree at
+        every step of a random nested toggle script — bitwise, since the
+        data is integer-exact."""
+        rng = np.random.default_rng(20_000 + seed)
+        T = _random_matrix(rng)
+        lazy = IncrementalClusterState(T, row_cache=3)  # force evictions
+        full = _FullMatrixReference(T)
+        assert_same_partition(lazy.cluster(), full.cluster())
+        for cols, zero in _random_toggles(rng, T.shape[1]):
+            values = 0.0 if zero else T[:, cols]
+            lazy.push(cols, values)
+            full.push(cols, values)
+            assert_same_partition(lazy.cluster(), full.cluster())
+        while lazy.depth:
+            lazy.pop()
+            full.pop()
+            assert_same_partition(lazy.cluster(), full.cluster())
+
+    @pytest.mark.parametrize("seed", range(20))
+    def test_tiny_row_cache_is_correct(self, seed):
+        """A 1-row LRU still clusters correctly (it just refetches)."""
+        rng = np.random.default_rng(31_000 + seed)
+        T = _random_matrix(rng)
+        tiny = IncrementalClusterState(T, row_cache=1)
+        assert_same_partition(tiny.cluster(), optics_cluster(T))
+
+
+class TestBatchedTrialsMatchSequential:
+    @pytest.mark.parametrize("seed", range(60))
+    def test_batch_equals_push_cluster_pop(self, seed):
+        rng = np.random.default_rng(40_000 + seed)
+        T = _random_matrix(rng)
+        state = IncrementalClusterState(T)
+        # random ambient stack, as in analyze_children's nesting
+        for cols, zero in _random_toggles(rng, T.shape[1], max_toggles=2):
+            state.push(cols, 0.0 if zero else T[:, cols])
+        trials = _random_trials(rng, T)
+        batched = state.cluster_batch(trials)
+        depth_before = state.depth
+        for (cols, values), got in zip(trials, batched):
+            state.push(cols, values)
+            want = state.cluster()
+            state.pop()
+            assert_same_partition(got, want)
+            assert got.threshold == want.threshold
+            np.testing.assert_array_equal(got.labels, want.labels)
+        assert state.depth == depth_before
+
+    @pytest.mark.parametrize("seed", range(20))
+    def test_batch_against_full_matrix_oracle(self, seed):
+        """Batched trials vs the eager-D² oracle directly — the
+        end-to-end 'no m×m, still bit-identical' claim."""
+        rng = np.random.default_rng(50_000 + seed)
+        T = _random_matrix(rng)
+        state = IncrementalClusterState(T)
+        full = _FullMatrixReference(T)
+        trials = _random_trials(rng, T)
+        for (cols, values), got in zip(trials, state.cluster_batch(trials)):
+            full.push(cols, values)
+            assert_same_partition(got, full.cluster())
+            full.pop()
+
+    @pytest.mark.parametrize("seed", range(60))
+    def test_batch_equals_sequential_on_float_data(self, seed):
+        """Bit-equality must hold on arbitrary float data too, not just
+        integer-exact matrices: einsum accumulates differently for
+        different operand layouts and contraction shapes, and a ~1-ulp
+        residue near zero can flip a threshold comparison.  (A fancy
+        column slice is F-ordered — the batch path must snapshot it in C
+        order exactly as push() does, and run the per-trial delta through
+        the same 'ij,ij->i' contraction as the sequential row.)"""
+        rng = np.random.default_rng(60_000 + seed)
+        m = int(rng.integers(3, 26))
+        n = int(rng.integers(1, 7))
+        T = rng.random((m, n)) * float(rng.choice([1e-3, 1.0, 1e4]))
+        if rng.random() < 0.4 and m >= 3:          # duplicate rows: the
+            T[int(rng.integers(0, m))] = T[0]      # near-zero-distance edge
+        # Two *independent* states: the batched and sequential paths must
+        # agree without sharing a base-row cache, so the comparison also
+        # catches fetch-history-dependent row values (a stacked gemm
+        # fetch is not bitwise a gemv fetch).
+        bstate = IncrementalClusterState(T)
+        sstate = IncrementalClusterState(T)
+        for _ in range(int(rng.integers(0, 3))):
+            c = int(rng.integers(0, n))
+            v = 0.0 if rng.random() < 0.5 else T[:, [c]]
+            bstate.push([c], v)
+            sstate.push([c], v)
+        trials = _random_trials(rng, T)
+        for (cols, values), got in zip(trials,
+                                       bstate.cluster_batch(trials)):
+            sstate.push(cols, values)
+            want = sstate.cluster()
+            sstate.pop()
+            np.testing.assert_array_equal(got.labels, want.labels)
+            assert got.threshold == want.threshold
+            assert got.n_clusters == want.n_clusters
+
+    def test_empty_batch(self):
+        state = IncrementalClusterState(np.ones((4, 3)))
+        assert state.cluster_batch([]) == []
+
+    @pytest.mark.parametrize("frac", [0.05, 0.25, 0.6])
+    def test_threshold_frac_respected_in_batch(self, frac):
+        rng = np.random.default_rng(7)
+        T = rng.integers(0, _VMAX, size=(12, 5)).astype(np.float64)
+        state = IncrementalClusterState(T, threshold_frac=frac)
+        (res,) = state.cluster_batch([([2], 0.0)])
+        state.push([2], 0.0)
+        assert_same_partition(res, state.cluster())
+        state.pop()
+
+
+class TestMemoryBound:
+    def test_no_m_squared_allocation(self):
+        """At m=4096 the old eager path allocated a 134 MB D² matrix;
+        the memory-bounded state + a batched trial sweep must stay far
+        under that (O(m·n + cache) + transient (trials, m) tensors)."""
+        m, n = 4096, 8
+        rng = np.random.default_rng(0)
+        T = rng.integers(0, _VMAX, size=(m, n)).astype(np.float64)
+        mm_bytes = m * m * 8
+        tracemalloc.start()
+        state = IncrementalClusterState(T)
+        state.cluster()
+        state.cluster_batch([([j], 0.0) for j in range(n)])
+        state.push([0], 0.0)
+        state.cluster()
+        state.pop()
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        assert peak < mm_bytes // 8, \
+            f"peak {peak/1e6:.1f} MB suggests an m×m materialization " \
+            f"({mm_bytes/1e6:.0f} MB)"
+
+    def test_wide_composite_windows_stay_bounded(self):
+        """Composite-window sweeps must not front-load O(trials·width·m)
+        column snapshots: at m=8192 with 33 width-32 windows that alone
+        would be ~70 MB; the lazy per-chunk build stays far under it."""
+        m, n, w = 8192, 64, 32
+        rng = np.random.default_rng(1)
+        # Clustered data (one straggler block), like real measurement
+        # matrices: a handful of greedy rounds, not one per point.
+        T = 1000.0 + rng.integers(0, 3, size=(m, n)).astype(np.float64)
+        T[: m // 8, n // 3] *= 6.0
+        state = IncrementalClusterState(T)
+        state.cluster()                     # warm the baseline seed rows
+        trials = [(list(range(s, s + w)), 0.0) for s in range(n - w + 1)]
+        tracemalloc.start()
+        results = state.cluster_batch(trials)
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        assert len(results) == n - w + 1
+        assert peak < 40e6, f"peak {peak/1e6:.1f} MB: composite batch " \
+            f"is front-loading per-trial snapshots"
+
+    def test_row_cache_bounded(self):
+        m, n = 128, 4
+        rng = np.random.default_rng(3)
+        # every point isolated -> every row becomes a seed row
+        T = (np.arange(m)[:, None] * 1000.0 + rng.integers(
+            0, 3, size=(m, n))).astype(np.float64)
+        state = IncrementalClusterState(T, row_cache=16)
+        state.cluster()
+        assert len(state._rows) <= 16
+
+
+class TestToggleMemoization:
+    def test_identical_toggles_never_recluster(self):
+        """The Algorithm 2 evaluator memoizes by toggle-set signature:
+        repeated and in-batch duplicate trials cost zero clusterings."""
+        rng = np.random.default_rng(5)
+        T = rng.integers(0, _VMAX, size=(10, 6)).astype(np.float64)
+        calls = []
+
+        def counting_fn(M):
+            calls.append(1)
+            return optics_cluster(M)
+
+        work = T.copy()
+        state = _ScratchToggleState(work, counting_fn)
+        ev = _TrialEvaluator(state, T, initially_zeroed=[])
+        ev.cluster()
+        ev.cluster()                                  # memo hit
+        assert len(calls) == 1
+        ev.trials([[0], [1], [0]], zero=True)         # in-batch duplicate
+        assert len(calls) == 3
+        ev.trials([[1], [0]], zero=True)              # all memoized
+        assert len(calls) == 3
+        # restoring an untouched column reproduces the baseline signature
+        ev.trials([[2]], zero=False)
+        assert len(calls) == 3
+
+    def test_signature_tracks_push_pop(self):
+        rng = np.random.default_rng(6)
+        T = rng.integers(1, _VMAX, size=(8, 4)).astype(np.float64)
+        calls = []
+
+        def counting_fn(M):
+            calls.append(1)
+            return optics_cluster(M)
+
+        state = _ScratchToggleState(T.copy(), counting_fn)
+        ev = _TrialEvaluator(state, T, initially_zeroed=[])
+        ev.push_zero([1])
+        ev.cluster()
+        ev.pop()
+        ev.push_zero([1])                             # same signature again
+        ev.cluster()
+        ev.pop()
+        assert len(calls) == 1
