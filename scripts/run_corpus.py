@@ -11,19 +11,23 @@ directly as a CI gate.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
-import time
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--backend", choices=("synthetic", "runtime"),
+    ap.add_argument("--backend", choices=("synthetic", "runtime", "train"),
                     default=None, help="restrict to one backend")
     ap.add_argument("--entry", action="append", default=None,
                     help="run only these entries (repeatable)")
     ap.add_argument("--list", action="store_true",
                     help="list registered entries and exit")
+    ap.add_argument("--train-trace-dir", default=None, metavar="DIR",
+                    help="save each train-backend entry's RegionTrace "
+                         "artifact here (one training run serves both the "
+                         "gate and the artifact)")
     args = ap.parse_args(argv)
 
     from repro.scenarios import run_entry_robust, select_entries
@@ -42,9 +46,14 @@ def main(argv=None) -> int:
 
     results = []
     for e in entries:
-        t0 = time.perf_counter()
         r = run_entry_robust(e, seed=args.seed)
-        results.append((r, time.perf_counter() - t0))
+        results.append((r, r.attempt_walls))
+        if args.train_trace_dir and e.backend == "train":
+            trace = r.collector.trainer.trace
+            path = os.path.join(args.train_trace_dir,
+                                e.name.replace("/", "-") + ".npz")
+            os.makedirs(args.train_trace_dir, exist_ok=True)
+            print(f"saved trace artifact: {trace.save(path)}")
     if not results:
         print("no entries selected", file=sys.stderr)
         return 2
@@ -53,13 +62,18 @@ def main(argv=None) -> int:
           f"{'causes':>6s} {'wall_s':>7s}  status")
     print("-" * (wname + 52))
     failures = 0
-    for r, wall in results:
+    for r, walls in results:
         status = "ok" if r.passed else "FAIL"
         if not r.passed:
             failures += 1
         print(f"{r.entry.name:{wname}s} {r.entry.truth.kind:13s} "
               f"{r.precision:6.2f} {r.recall:6.2f} {r.cause_recall:6.2f} "
-              f"{wall:7.3f}  {status}")
+              f"{sum(walls):7.3f}  {status}")
+        if len(walls) > 1:
+            # a retried wall-clock entry: report every attempt, not just
+            # the one whose result was kept
+            print(f"{'':{wname}s}   retried: attempt wall_s "
+                  + ", ".join(f"{w:.3f}" for w in walls))
         if r.missed:
             print(f"{'':{wname}s}   missed: {sorted(r.missed)}")
         if not r.passed and r.spurious:

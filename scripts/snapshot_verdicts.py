@@ -1,14 +1,22 @@
 #!/usr/bin/env python
-"""Dump full analyzer verdicts for every *synthetic* corpus entry to JSON.
+"""Dump full analyzer verdicts for every *synthetic* corpus entry to JSON,
+or diff the current verdicts against a committed baseline.
 
     PYTHONPATH=src python scripts/snapshot_verdicts.py out.json [--seed N]
+    PYTHONPATH=src python scripts/snapshot_verdicts.py --check VERDICTS.json
 
 The corpus gate (scripts/run_corpus.py) only scores pass/fail; this dump
 captures everything a verdict contains — partitions, CCR/CCCR paths, cause
 attributes, per-path causes, dissimilarity severity, composite_s, disparity
 severities — so a hot-path change can be proven output-preserving by
-diffing two snapshots.  Runtime-backend entries are wall-clock noisy and
-are excluded.
+diffing two snapshots.  Runtime/train-backend entries are wall-clock noisy
+and are excluded.
+
+``--check`` compares the live verdicts against a baseline file (the repo
+commits one at VERDICTS_synthetic.json): every baseline entry must still
+exist and match bit-for-bit; entries added since the baseline are listed
+but allowed (regenerate the baseline when adding entries or intentionally
+changing the analyzer).
 """
 from __future__ import annotations
 
@@ -49,11 +57,50 @@ def snapshot(seed: int) -> dict:
     return out
 
 
+def check(baseline_path: str, seed: int) -> int:
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    current = snapshot(seed)
+    drifted = []
+    for name, want in sorted(baseline.items()):
+        got = current.get(name)
+        if got is None:
+            drifted.append((name, "entry missing from current corpus"))
+        elif got != want:
+            detail = ", ".join(k for k in sorted(set(want) | set(got))
+                               if got.get(k) != want.get(k))
+            drifted.append((name, f"fields drifted: {detail}"))
+    new = sorted(set(current) - set(baseline))
+    if new:
+        print(f"{len(new)} entries not in baseline (ok, regenerate to pin): "
+              f"{new}")
+    if drifted:
+        print(f"VERDICT DRIFT vs {baseline_path} (seed {seed}):")
+        for name, why in drifted:
+            print(f"  {name}: {why}")
+        return 1
+    print(f"{len(baseline)} baseline entries bit-identical "
+          f"(seed {seed}) vs {baseline_path}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("out")
+    ap.add_argument("out", nargs="?", default=None,
+                    help="snapshot output path (omit with --check)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check", default=None, metavar="BASELINE",
+                    help="diff live verdicts against this snapshot; exit "
+                         "1 on any drift")
     args = ap.parse_args(argv)
+    if args.check:
+        if args.out:
+            ap.error("--check does not write a snapshot; drop the output "
+                     "path (regenerate first, then --check, if you want "
+                     "both)")
+        return check(args.check, args.seed)
+    if not args.out:
+        ap.error("either an output path or --check is required")
     doc = snapshot(args.seed)
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)

@@ -17,7 +17,7 @@ from .clustering import (DISTANCE_BACKENDS, HIGH, LOW, MEDIUM,
                          get_distance_backend, is_similar, kmeans_1d,
                          kmeans_severity, optics_cluster)
 from .collector import (RegionBehavior, SyntheticWorkload, TimedRegionRunner,
-                        static_metrics_from_costs)
+                        static_metrics_from_costs, static_trace_from_costs)
 from .hlo import (COLLECTIVE_OPS, TPU_V5E, CollectiveStats, HardwareSpec,
                   RooflineTerms, cost_analysis_of, parse_collectives,
                   roofline_terms, shape_bytes)
@@ -31,5 +31,7 @@ from .roughset import (DecisionTable, format_matrix, paper_table2,
 from .search import (DisparityReport, DissimilarityReport,
                      find_disparity_bottlenecks,
                      find_dissimilarity_bottlenecks, severity_banding)
+from .trace import (RATE_METRICS, TRACE_FORMAT_VERSION, RegionTrace,
+                    schema_from_tree, tree_from_schema)
 
 __all__ = [name for name in dir() if not name.startswith("_")]

@@ -156,6 +156,16 @@ class AutoAnalyzer:
         TimedRegionRunner wrappers, replayed traces)."""
         return self.analyze(collector.collect())
 
+    def analyze_trace(self, trace,
+                      window: Optional[Tuple[int, Optional[int]]] = None
+                      ) -> AnalysisResult:
+        """Run the pipeline on a :class:`repro.core.trace.RegionTrace`
+        (in-memory or loaded from a saved artifact), optionally restricted
+        to a step window of a long run.  The trace's own deterministic
+        reduction feeds :meth:`analyze`, so offline analysis of a saved
+        artifact equals the in-process result bit-for-bit."""
+        return self.analyze(trace.reduce(window))
+
     def _paths(self, rids: Sequence[int]) -> Tuple[str, ...]:
         out = []
         for rid in rids:

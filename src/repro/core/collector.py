@@ -1,5 +1,12 @@
-"""Collectors: produce :class:`RegionMetrics` from real or simulated runs
-(paper §4.1 step 2, §5 "Data collector").
+"""Collectors: produce :class:`RegionTrace` samples from real or simulated
+runs (paper §4.1 step 2, §5 "Data collector").
+
+Collection is decoupled from analysis: every backend records raw
+per-(step, repeat, shard, region) samples into a :class:`RegionTrace`
+(``*_trace`` entry points) and derives its classic :class:`RegionMetrics`
+output through the single deterministic :meth:`RegionTrace.reduce` path —
+so an in-process analysis and an offline analysis of the saved artifact
+see bit-identical inputs.
 
 Three backends:
 
@@ -30,9 +37,10 @@ import jax
 
 from . import hlo as hlo_mod
 from .metrics import (BYTES, COMM_BYTES, COMM_TIME, CPU_TIME, FLOPS,
-                      HBM_INTENSITY, HOST_BYTES, VMEM_PRESSURE, WALL_TIME,
-                      RegionMetrics)
+                      HBM_INTENSITY, HOST_BYTES, RAW_METRICS, VMEM_PRESSURE,
+                      WALL_TIME, RegionMetrics)
 from .regions import CodeRegion, RegionTree
+from .trace import RegionTrace
 
 
 def _cpu_clock_tick() -> Optional[float]:
@@ -83,12 +91,15 @@ class TimedRegionRunner:
     def _leaf_regions(self) -> List[CodeRegion]:
         return [r for r in self.tree.regions() if r.fn is not None]
 
-    def run(self, shard_states: Sequence[Any],
-            shard_data: Sequence[Any]) -> RegionMetrics:
+    def run_trace(self, shard_states: Sequence[Any],
+                  shard_data: Sequence[Any]) -> RegionTrace:
+        """Execute one instrumented step and record *raw* samples: every
+        repeat's wall/CPU reading survives into the trace; min-of-repeats
+        and the CPU-tick snap happen in :meth:`RegionTrace.reduce`, driven
+        by the ``cpu_tick`` stored in the header — so an offline analysis
+        of the saved artifact reproduces this host's decisions exactly."""
         regions = self._leaf_regions()
         m = len(shard_states)
-        rm = RegionMetrics(region_ids=[r.region_id for r in regions],
-                           n_processes=m)
         states = list(shard_states)
         # Lazy: the tick measurement busy-spins up to 50ms, so pay it only
         # when actually timing.  Cached once it succeeds; a failed
@@ -99,6 +110,10 @@ class TimedRegionRunner:
         tick = (TimedRegionRunner._cpu_tick if TimedRegionRunner._cpu_tick
                 is not None else
                 time.get_clock_info("process_time").resolution)
+        trace = RegionTrace.for_tree(
+            self.tree, [r.region_id for r in regions], m,
+            n_steps=1, n_repeats=self.repeats,
+            meta={"collector": "runtime", "cpu_tick": tick, "derived": True})
         for r in regions:
             if r.region_id not in self._compiled:
                 jitted = jax.jit(r.fn)
@@ -114,54 +129,61 @@ class TimedRegionRunner:
             for i in range(m):
                 for _ in range(self.warmup):
                     jax.block_until_ready(jitted(states[i], shard_data[i]))
-                walls, cpus = [], []
-                for _ in range(self.repeats):
+                for k in range(self.repeats):
                     t0w, t0c = time.perf_counter(), time.process_time()
                     out = jax.block_until_ready(jitted(states[i],
                                                        shard_data[i]))
                     t1w, t1c = time.perf_counter(), time.process_time()
-                    walls.append(t1w - t0w)
-                    cpus.append(t1c - t0c)
+                    trace.record(WALL_TIME, 0, k, i, r.region_id, t1w - t0w)
+                    trace.record(CPU_TIME, 0, k, i, r.region_id, t1c - t0c)
+                    trace.record(FLOPS, 0, k, i, r.region_id, flops)
+                    trace.record(BYTES, 0, k, i, r.region_id, byts)
+                    trace.record(COMM_BYTES, 0, k, i, r.region_id, comm)
                 states[i] = out
-                wall = float(np.min(walls))
-                cpu = float(np.min(cpus))
-                # Below the tick the cpu delta is pure quantization noise;
-                # within one tick of wall it is a CPU-bound region whose
-                # reading is only jiffy-phase (a wall of ~1-2 ticks can
-                # legitimately read one jiffy high or low — a 2x error).
-                # Only compute regions (no collectives) are snapped to
-                # wall: a communicating region legitimately waits with the
-                # CPU idle, and that cpu-vs-wall gap is the very signal the
-                # analyzer uses to tell waiting from compute.
-                if comm == 0 and (wall < tick or abs(cpu - wall) < tick):
-                    cpu = wall
-                rm.set(WALL_TIME, i, r.region_id, wall)
-                rm.set(CPU_TIME, i, r.region_id, cpu)
-                rm.set(FLOPS, i, r.region_id, flops)
-                rm.set(BYTES, i, r.region_id, byts)
-                rm.set(COMM_BYTES, i, r.region_id, comm)
-        rm.derived()
         self.final_states = states
-        return rm
+        return trace
+
+    def run(self, shard_states: Sequence[Any],
+            shard_data: Sequence[Any]) -> RegionMetrics:
+        return self.run_trace(shard_states, shard_data).reduce()
+
+
+def static_trace_from_costs(
+    tree: RegionTree,
+    region_ids: Sequence[int],
+    costs: Dict[int, Dict[str, float]],
+    n_processes: int = 1,
+) -> RegionTrace:
+    """Dry-run backend: per-region static costs -> single-step trace.
+
+    ``costs[rid]`` maps metric name -> value (same for every shard; the
+    dry-run has no per-shard variation by construction).
+    """
+    trace = RegionTrace.for_tree(
+        tree, list(region_ids), n_processes,
+        meta={"collector": "static", "derived": True})
+    for rid in region_ids:
+        for name, v in costs.get(rid, {}).items():
+            trace.metric(name)[0, 0, :, trace.col(rid)] = float(v)
+    return trace
 
 
 def static_metrics_from_costs(
     region_ids: Sequence[int],
     costs: Dict[int, Dict[str, float]],
     n_processes: int = 1,
+    tree: Optional[RegionTree] = None,
 ) -> RegionMetrics:
-    """Dry-run backend: per-region static costs -> RegionMetrics.
+    """Classic dry-run entry point, now routed through the trace layer.
 
-    ``costs[rid]`` maps metric name -> value (same for every shard; the
-    dry-run has no per-shard variation by construction).
-    """
-    rm = RegionMetrics(region_ids=list(region_ids), n_processes=n_processes)
-    for rid in region_ids:
-        for name, v in costs.get(rid, {}).items():
-            for i in range(n_processes):
-                rm.set(name, i, rid, float(v))
-    rm.derived()
-    return rm
+    Without a ``tree`` the trace header gets a flat stand-in schema (the
+    static callers predate region trees); the reduction is identical."""
+    if tree is None:
+        tree = RegionTree("static")
+        for rid in region_ids:
+            tree.add(f"cr{rid}", region_id=rid)   # raises if rid is 0
+    return static_trace_from_costs(tree, region_ids, costs,
+                                   n_processes).reduce()
 
 
 @dataclasses.dataclass
@@ -197,26 +219,38 @@ class SyntheticWorkload:
         self.rng = np.random.default_rng(seed)
         self.jitter = jitter
 
-    def collect(self) -> RegionMetrics:
+    def collect_trace(self, n_steps: int = 1) -> RegionTrace:
+        """Per-step samples: every step re-runs the declared behaviour
+        with a fresh measurement-noise draw (one ``standard_normal(m)``
+        per (region, step), region-major — for ``n_steps=1`` the rng
+        stream is consumed exactly as the classic single-shot collection
+        did, so the reduced metrics are bit-identical)."""
         rids = sorted(self.behaviors)
-        rm = RegionMetrics(region_ids=rids, n_processes=self.m)
+        trace = RegionTrace.for_tree(
+            self.tree, rids, self.m, n_steps=n_steps,
+            metrics=RAW_METRICS, meta={"collector": "synthetic"})
         for rid, b in self.behaviors.items():
+            j = trace.col(rid)
             if b.imbalance is None:
                 scale = np.ones(self.m)
             else:
                 scale = np.asarray(b.imbalance, dtype=np.float64)
                 if scale.size == 1:
                     scale = np.full(self.m, float(scale))
-            noise = 1.0 + self.jitter * self.rng.standard_normal(self.m)
-            t = b.base_time * scale * noise
-            for i in range(self.m):
-                rm.set(WALL_TIME, i, rid, t[i])
-                rm.set(CPU_TIME, i, rid, t[i] * (1.0 - b.comm_time_frac))
-                rm.set(FLOPS, i, rid, t[i] * b.flops_per_s)
-                rm.set(BYTES, i, rid, t[i] * b.flops_per_s * b.hbm_intensity)
-                rm.set(VMEM_PRESSURE, i, rid, b.vmem_pressure)
-                rm.set(HBM_INTENSITY, i, rid, b.hbm_intensity)
-                rm.set(HOST_BYTES, i, rid, b.host_bytes * scale[i])
-                rm.set(COMM_BYTES, i, rid, b.comm_bytes * scale[i])
-                rm.set(COMM_TIME, i, rid, t[i] * b.comm_time_frac)
-        return rm
+            noise = 1.0 + self.jitter * self.rng.standard_normal(
+                (n_steps, self.m))
+            t = b.base_time * scale * noise           # (S, m)
+            trace.metric(WALL_TIME)[:, 0, :, j] = t
+            trace.metric(CPU_TIME)[:, 0, :, j] = t * (1.0 - b.comm_time_frac)
+            trace.metric(FLOPS)[:, 0, :, j] = t * b.flops_per_s
+            trace.metric(BYTES)[:, 0, :, j] = \
+                t * b.flops_per_s * b.hbm_intensity
+            trace.metric(VMEM_PRESSURE)[:, 0, :, j] = b.vmem_pressure
+            trace.metric(HBM_INTENSITY)[:, 0, :, j] = b.hbm_intensity
+            trace.metric(HOST_BYTES)[:, 0, :, j] = b.host_bytes * scale
+            trace.metric(COMM_BYTES)[:, 0, :, j] = b.comm_bytes * scale
+            trace.metric(COMM_TIME)[:, 0, :, j] = t * b.comm_time_frac
+        return trace
+
+    def collect(self) -> RegionMetrics:
+        return self.collect_trace().reduce()

@@ -77,9 +77,16 @@ class RegionTree:
         parent: Optional[CodeRegion] = None,
         fn: Optional[Callable] = None,
         management: bool = False,
+        region_id: Optional[int] = None,
     ) -> CodeRegion:
+        """Add a region.  ``region_id`` defaults to the next dense id;
+        pass one explicitly to mirror external numbering (paper trees,
+        trace schemas) — id 0 stays reserved for the root."""
         parent = parent if parent is not None else self.root
-        region = CodeRegion(name, len(self._by_id), parent=parent, fn=fn,
+        rid = len(self._by_id) if region_id is None else region_id
+        if rid in self._by_id:
+            raise ValueError(f"duplicate region id {rid}")
+        region = CodeRegion(name, rid, parent=parent, fn=fn,
                             management=management)
         parent.children.append(region)
         self._by_id[region.region_id] = region
@@ -129,15 +136,11 @@ def st_region_tree() -> RegionTree:
     """
     t = RegionTree("ST")
     nodes: Dict[int, CodeRegion] = {}
-    # 1..10, 13, 14 are 1-code regions; 11, 12 nested in 14.
+    # 1..10, 13, 14 are 1-code regions; 11, 12 nested in 14.  Explicit
+    # ids mirror the paper numbering.
     order = [1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 13, 14]
     for i in order:
-        nodes[i] = t.add(f"cr{i}")
+        nodes[i] = t.add(f"cr{i}", region_id=i)
     for i in (11, 12):
-        nodes[i] = t.add(f"cr{i}", parent=nodes[14])
-    # Remap ids so that region_id == paper numbering.
-    t._by_id = {0: t.root}
-    for i, n in nodes.items():
-        n.region_id = i
-        t._by_id[i] = n
+        nodes[i] = t.add(f"cr{i}", parent=nodes[14], region_id=i)
     return t

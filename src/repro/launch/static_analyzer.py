@@ -156,7 +156,8 @@ def analyze_train_cell(cfg: ModelConfig, shape: InputShape, mesh,
             COMM_BYTES: c["coll"],
         }
     from repro.core import static_metrics_from_costs
-    rm = static_metrics_from_costs(sorted(metrics), metrics, n_processes=1)
+    rm = static_metrics_from_costs(sorted(metrics), metrics, n_processes=1,
+                                   tree=tree)
     az = AutoAnalyzer(tree, peak_flops_per_s=hw.peak_flops)
     res = az.analyze(rm)
     return tree, rm, res

@@ -1,10 +1,11 @@
 from . import faults
 from .corpus import (CORPUS, CorpusEntry, CorpusRunResult,
                      FaultedSyntheticCollector, GroundTruth,
-                     RuntimeFaultCollector, baseline_mpibzip2,
-                     baseline_npar1way, baseline_st, corpus_entries,
-                     evaluate_corpus, model_region_tree, run_entry,
-                     run_entry_robust, score_verdict, select_entries)
+                     RuntimeFaultCollector, TrainFaultCollector,
+                     baseline_mpibzip2, baseline_npar1way, baseline_st,
+                     corpus_entries, evaluate_corpus, model_region_tree,
+                     run_entry, run_entry_robust, score_verdict,
+                     select_entries)
 from .mpibzip2 import mpibzip2_scenario
 from .npar1way import npar1way_scenario
 from .st import (IMBALANCE_11, st_fine_scenario, st_scenario,
@@ -12,7 +13,8 @@ from .st import (IMBALANCE_11, st_fine_scenario, st_scenario,
 
 __all__ = ["CORPUS", "CorpusEntry", "CorpusRunResult",
            "FaultedSyntheticCollector", "GroundTruth", "IMBALANCE_11",
-           "RuntimeFaultCollector", "baseline_mpibzip2", "baseline_npar1way",
+           "RuntimeFaultCollector", "TrainFaultCollector",
+           "baseline_mpibzip2", "baseline_npar1way",
            "baseline_st", "corpus_entries", "evaluate_corpus", "faults",
            "model_region_tree", "mpibzip2_scenario", "npar1way_scenario",
            "run_entry", "run_entry_robust", "score_verdict",

@@ -11,10 +11,16 @@ backends:
 
 * ``synthetic`` — clean balanced baseline behaviours through
   :class:`SyntheticWorkload`, then deterministic fault perturbation
-  (scenarios/faults.py).  Bit-reproducible given the seed.
+  (scenarios/faults.py).  Bit-reproducible given the seed.  Collection
+  goes through the :class:`RegionTrace` layer (multi-step when the entry
+  asks for it — the time-varying archetypes need the per-step axis).
 * ``runtime``  — real jitted execution through
   :class:`TimedRegionRunner`, with designated shards running genuinely
   more work via :func:`faults.iterated_work`.
+* ``train``    — a real region-instrumented smoke :class:`Trainer` run
+  (train/loop.py): the actual forward/backward + optimizer regions,
+  fault-injected through per-shard iteration counts, analyzed from the
+  trace the trainer emits.
 
 ``evaluate_corpus`` scores every entry (precision/recall of located paths,
 cause recall) and backs both tests/test_fault_corpus.py and
@@ -24,13 +30,14 @@ regression gate.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, FrozenSet, List, Optional, Tuple
 
 from repro.core import (COMM_BYTES, FLOPS, HBM_INTENSITY, HOST_BYTES,
                         VMEM_PRESSURE, WALL_TIME, AutoAnalyzer,
-                        RegionBehavior, RegionMetrics, RegionTree,
-                        SyntheticWorkload, TimedRegionRunner, Verdict,
-                        st_region_tree)
+                        RegionBehavior, RegionMetrics, RegionTrace,
+                        RegionTree, SyntheticWorkload, TimedRegionRunner,
+                        Verdict, st_region_tree)
 
 from . import faults as F
 
@@ -57,7 +64,12 @@ class CorpusEntry:
     build: Callable[[int], Tuple[RegionTree, Any]]
     truth: GroundTruth
     analyzer_kw: Tuple[Tuple[str, Any], ...] = ()
-    min_precision: float = 0.34
+    # Ratcheted from the original 0.34 floor: every synthetic entry has
+    # held precision 1.0 across seeds {0,1,2,3,7,11}, so the default now
+    # tolerates no spurious located path (one spurious on a single-truth
+    # entry reads 0.5).  Wall-clock backends (runtime/train) keep explicit
+    # wider floors.
+    min_precision: float = 0.9
 
 
 CORPUS: Dict[str, CorpusEntry] = {}
@@ -83,22 +95,30 @@ def corpus_entries(backend: Optional[str] = None,
 class FaultedSyntheticCollector:
     """Synthetic backend: balanced baseline behaviours + fault injection.
     Deterministic given the seed (measurement jitter and fault rng both
-    derive from it); no device execution."""
+    derive from it); no device execution.  Collection emits a
+    :class:`RegionTrace` (``n_steps`` samples; step-aware archetypes like
+    ``ThermalThrottleDrift`` perturb the per-step axis) and the classic
+    metrics fall out of the trace's deterministic reduction."""
 
     def __init__(self, tree: RegionTree,
                  behaviors: Dict[int, RegionBehavior],
                  fault_list: Tuple, seed: int,
-                 n_processes: int = N_PROCESSES):
+                 n_processes: int = N_PROCESSES, n_steps: int = 1):
         self.tree = tree
         self.behaviors = behaviors
         self.faults = fault_list
         self.seed = seed
         self.m = n_processes
+        self.n_steps = n_steps
 
-    def collect(self) -> RegionMetrics:
+    def collect_trace(self) -> RegionTrace:
         wl = SyntheticWorkload(self.tree, self.behaviors, self.m,
                                seed=self.seed)
-        return F.inject(self.tree, wl.collect(), self.faults, seed=self.seed)
+        return F.inject_trace(self.tree, wl.collect_trace(self.n_steps),
+                              self.faults, seed=self.seed)
+
+    def collect(self) -> RegionMetrics:
+        return self.collect_trace().reduce()
 
 
 class RuntimeFaultCollector:
@@ -127,6 +147,20 @@ class RuntimeFaultCollector:
         runner = TimedRegionRunner(self.tree, warmup=1,
                                    repeats=self.repeats)
         return runner.run(states, data)
+
+
+class TrainFaultCollector:
+    """Train backend: a real region-instrumented smoke training run.  The
+    designated shards genuinely execute more fwd_bwd iterations inside the
+    jitted step; ``collect`` reduces the trace the trainer emitted — the
+    same artifact ``scripts/analyze_trace.py`` replays offline."""
+
+    def __init__(self, trainer):
+        self.trainer = trainer
+
+    def collect(self) -> RegionMetrics:
+        self.trainer.run()
+        return self.trainer.trace.reduce()
 
 
 # -- balanced baseline workloads -----------------------------------------
@@ -227,11 +261,12 @@ def model_region_tree(arch: str):
 
 # -- entry builders -------------------------------------------------------
 
-def _synthetic(baseline: Callable, *fault_list):
+def _synthetic(baseline: Callable, *fault_list, n_steps: int = 1):
     def build(seed: int):
         tree, behaviors = baseline()
         return tree, FaultedSyntheticCollector(tree, behaviors,
-                                               tuple(fault_list), seed)
+                                               tuple(fault_list), seed,
+                                               n_steps=n_steps)
     return build
 
 
@@ -240,6 +275,35 @@ def _model_synthetic(arch: str, *fault_list):
         tree, behaviors, _ = model_region_tree(arch)
         return tree, FaultedSyntheticCollector(tree, behaviors,
                                                tuple(fault_list), seed)
+    return build
+
+
+_TRAIN_KW = (("threshold_frac", 0.45),)
+
+
+def _train(iters_per_shard: Tuple[int, ...], steps: int = 2,
+           arch: str = "st-100m", repeats: int = 1):
+    """Builder for the train backend: a region-instrumented smoke Trainer
+    whose per-shard fwd_bwd iteration counts carry the injected straggler.
+    The trainer (and its jitted regions) is built at corpus-build time so
+    the entry can expose the region tree before any execution."""
+    def build(seed: int):
+        from repro.configs import get_arch
+        from repro.data import DataConfig
+        from repro.optim import AdamWConfig
+        from repro.train import Trainer, TrainerConfig
+        cfg = get_arch(arch).smoke
+        trainer = Trainer(
+            cfg, AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50),
+            DataConfig(seq_len=32, global_batch=2 * len(iters_per_shard),
+                       vocab=cfg.vocab),
+            TrainerConfig(steps=steps, ckpt_dir=None, ckpt_every=0,
+                          seed=seed, trace=True,
+                          trace_shards=len(iters_per_shard),
+                          trace_iters=tuple(iters_per_shard),
+                          trace_repeats=repeats,
+                          trace_meta={"analyzer_kw": dict(_TRAIN_KW)}))
+        return trainer.region_tree, TrainFaultCollector(trainer)
     return build
 
 
@@ -283,6 +347,14 @@ class CorpusRunResult:
     cause_recall: float
     # causes as scored: location-gated, unlike verdict.cause_attributes
     causes_found: FrozenSet[str] = frozenset()
+    # wall seconds of every collection+analysis attempt (run_entry_robust
+    # may retry wall-clock backends; all attempts are reported, not just
+    # the one whose result was kept)
+    attempt_walls: Tuple[float, ...] = ()
+    # the collector behind the kept result — lets callers reach artifacts
+    # it produced (e.g. the train backend's RegionTrace) without
+    # re-collecting
+    collector: Any = None
 
     @property
     def passed(self) -> bool:
@@ -340,21 +412,30 @@ def run_entry(entry: CorpusEntry, seed: int = 0) -> CorpusRunResult:
     tree, collector = entry.build(seed)
     analyzer = AutoAnalyzer(tree, **dict(entry.analyzer_kw))
     result = analyzer.analyze_collector(collector)
-    return score_verdict(entry, result.verdict)
+    r = score_verdict(entry, result.verdict)
+    r.collector = collector
+    return r
 
 
 def run_entry_robust(entry: CorpusEntry, seed: int = 0) -> CorpusRunResult:
-    """run_entry, with one fresh collection for runtime entries that fail:
-    wall-clock collection on a loaded host can lose a measurement to a
-    pathological scheduler burst.  The better of the two results is kept.
-    Synthetic entries never retry — they are deterministic, so a failure
-    is a real regression."""
+    """run_entry, with one fresh collection for wall-clock backends
+    (runtime, train) that fail: collection on a loaded host can lose a
+    measurement to a pathological scheduler burst.  The better of the two
+    results is kept; ``attempt_walls`` records the wall seconds of *every*
+    attempt so a retry is visible in reports rather than silently folded
+    into one number.  Synthetic entries never retry — they are
+    deterministic, so a failure is a real regression."""
+    t0 = time.perf_counter()
     r = run_entry(entry, seed=seed)
-    if entry.backend == "runtime" and not r.passed:
+    r.attempt_walls = (time.perf_counter() - t0,)
+    if entry.backend in ("runtime", "train") and not r.passed:
+        t1 = time.perf_counter()
         r2 = run_entry(entry, seed=seed + 1)
+        walls = r.attempt_walls + (time.perf_counter() - t1,)
         if (r2.passed, r2.recall, r2.precision) >= \
                 (r.passed, r.recall, r.precision):
             r = r2
+        r.attempt_walls = walls
     return r
 
 
@@ -580,6 +661,35 @@ register_entry(CorpusEntry(
     truth=GroundTruth("dissimilarity",
                       frozenset({"chatglm3-smoke/layer_1/mlp"}),
                       frozenset({FLOPS})),
+))
+
+register_entry(CorpusEntry(
+    name="st/thermal-throttle-cr5",
+    app="st", backend="synthetic",
+    description="Rank 1's chip down-clocks progressively over a 12-step "
+                "run: cr5 wall+CPU time ramps to 4x by the final step "
+                "(time-varying — only the trace layer's per-step axis "
+                "expresses it; no quantity metric inflates)",
+    build=_synthetic(baseline_st,
+                     F.ThermalThrottleDrift("ST/cr5", procs=(1,),
+                                            peak_factor=4.0),
+                     n_steps=12),
+    truth=GroundTruth("dissimilarity", frozenset({"ST/cr5"})),
+))
+
+# Train backend: a real smoke training run through the region-instrumented
+# Trainer.  Shard 3's fwd_bwd genuinely executes 12x the iterations inside
+# the jitted step; the wide threshold_frac absorbs wall-clock noise.
+register_entry(CorpusEntry(
+    name="train/fwdbwd-straggler-smoke",
+    app="train", backend="train",
+    description="Region-instrumented smoke Trainer run: shard 3 executes "
+                "12x the fwd_bwd iterations per step (real jitted "
+                "fwd/bwd + optimizer, trace-collected)",
+    build=_train(iters_per_shard=(1, 1, 1, 12), steps=2),
+    truth=GroundTruth("dissimilarity", frozenset({"train/fwd_bwd"})),
+    analyzer_kw=_TRAIN_KW,
+    min_precision=0.2,
 ))
 
 # Runtime backend: designated shards genuinely execute ~10x the solver

@@ -30,6 +30,7 @@ from repro.core.metrics import (BYTES, COMM_BYTES, COMM_TIME, CPU_TIME,
                                 FLOPS, HBM_INTENSITY, HOST_BYTES,
                                 VMEM_PRESSURE, WALL_TIME, RegionMetrics)
 from repro.core.regions import RegionTree
+from repro.core.trace import RegionTrace
 
 DISSIMILARITY = "dissimilarity"
 DISPARITY = "disparity"
@@ -406,6 +407,52 @@ class ExpertLoadImbalance:
         return (self.hot_path,)
 
 
+@dataclasses.dataclass(frozen=True)
+class ThermalThrottleDrift:
+    """Designated processes slow down progressively across the run — a
+    chip heating up and down-clocking (time-varying, so only the trace
+    layer's per-step axis can express it; a single-snapshot collection
+    sees just the average).  Per step ``s`` the throttled processes'
+    wall *and* CPU time in ``region`` scale by
+
+        1 + (peak_factor - 1) * ((s + 1) / n_steps)
+
+    — a linear ramp reaching ``peak_factor`` at the final step.  Same
+    instructions, lower clock: no quantity metric inflates, so (like
+    :class:`CollectiveStraggler`) ``causes`` is empty; unlike the pure-
+    waiting archetypes the CPU clock stretches too, so the default
+    CPU-time similarity metric sees it."""
+
+    region: str
+    procs: Tuple[int, ...]
+    peak_factor: float = 4.0
+    kind: ClassVar[str] = DISSIMILARITY
+    causes: ClassVar[FrozenSet[str]] = frozenset()
+
+    def apply_trace(self, tree: RegionTree, trace: RegionTrace,
+                    rng: np.random.Generator) -> None:
+        rid = tree.by_path(self.region).region_id
+        j = trace.col(rid)
+        # _ancestor_cols only needs .col(), which RegionTrace shares with
+        # RegionMetrics — same inclusive-timing propagation, per step.
+        anc = _ancestor_cols(tree, trace, rid)
+        mask = np.zeros(trace.n_processes)
+        mask[list(self.procs)] = 1.0
+        for s in range(trace.n_steps):
+            ramp = (self.peak_factor - 1.0) * (s + 1) / trace.n_steps
+            factors = 1.0 + mask * ramp
+            for metric in (WALL_TIME, CPU_TIME):
+                M = trace.metric(metric)[s]          # (R, m, n) view
+                deltas = M[:, :, j] * (factors - 1.0)
+                M[:, :, j] += deltas
+                for c in anc:
+                    M[:, :, c] += deltas
+
+    @property
+    def paths(self) -> Tuple[str, ...]:
+        return (self.region,)
+
+
 def inject(tree: RegionTree, rm: RegionMetrics,
            faults: Sequence, seed: int = 0) -> RegionMetrics:
     """Apply ``faults`` in order to ``rm`` (mutates and returns it).
@@ -418,20 +465,58 @@ def inject(tree: RegionTree, rm: RegionMetrics,
     return rm
 
 
+def inject_trace(tree: RegionTree, trace: RegionTrace,
+                 faults: Sequence, seed: int = 0) -> RegionTrace:
+    """Trace-level injection (mutates and returns ``trace``).
+
+    Step-aware archetypes (those defining ``apply_trace``) perturb the
+    per-step samples directly.  Classic snapshot archetypes apply to each
+    (step, repeat) slice through a mutable :meth:`RegionTrace.step_views`
+    view — for a single-step, single-repeat trace the rng stream and the
+    arithmetic match :func:`inject` on the reduced metrics exactly, which
+    keeps the pre-trace corpus verdicts bit-identical."""
+    # Views only alias metrics the trace already holds; materialize the
+    # standard set so an archetype writing e.g. vmem_pressure into a
+    # runtime trace (which records five metrics) is not silently lost.
+    from repro.core.metrics import RAW_METRICS
+    for name in RAW_METRICS:
+        trace.metric(name)
+    rng = np.random.default_rng(seed + 0x5EED)
+    for f in faults:
+        if hasattr(f, "apply_trace"):
+            f.apply_trace(tree, trace, rng)
+        else:
+            for view in trace.step_views():
+                f.apply(tree, view, rng)
+    return trace
+
+
 # -- runtime backend ------------------------------------------------------
 
-def iterated_work(fn):
+def iterated_work(fn, indexed: bool = False):
     """Wrap a region callable for the runtime fault backend.
 
     ``fn(state, data) -> state`` becomes ``wrapped(state, (data, iters))``
     running the body ``iters`` times via a data-driven ``fori_loop``: one
     jitted function serves every shard, and a shard whose bundle carries a
     larger ``iters`` genuinely executes more work — calibrated extra work
-    rather than a post-hoc metric edit."""
+    rather than a post-hoc metric edit.
+
+    The *genuinely* matters: XLA hoists a loop-invariant body out of the
+    while-loop, so ``fn`` must make each iteration depend on the carried
+    state (the runtime solver does) and/or on the iteration index.  With
+    ``indexed=True`` the body receives ``(data, i)`` instead of ``data``
+    so it can vary per-iteration work by ``i`` (the train backend rolls
+    its micro-batch — value-preserving, but opaque to loop-invariant
+    code motion)."""
     import jax
 
     def wrapped(state, bundle):
         data, iters = bundle
-        return jax.lax.fori_loop(0, iters, lambda _, s: fn(s, data), state)
+        if indexed:
+            body = lambda i, s: fn(s, (data, i))
+        else:
+            body = lambda _, s: fn(s, data)
+        return jax.lax.fori_loop(0, iters, body, state)
 
     return wrapped

@@ -1,7 +1,8 @@
 from . import checkpoint
 from .fault_tolerance import remesh, run_with_restarts
 from .loop import (StragglerMonitor, Trainer, TrainerConfig, make_eval_step,
-                   make_train_step)
+                   make_train_step, train_region_tree)
 
 __all__ = ["checkpoint", "remesh", "run_with_restarts", "StragglerMonitor",
-           "Trainer", "TrainerConfig", "make_eval_step", "make_train_step"]
+           "Trainer", "TrainerConfig", "make_eval_step", "make_train_step",
+           "train_region_tree"]

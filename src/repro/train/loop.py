@@ -5,16 +5,22 @@ The same ``make_train_step`` serves three callers:
   * the production dry-run (512-device mesh, abstract lowering);
   * real training (mesh + shardings + donation).
 
-AutoAnalyzer is a first-class hook: per-step timings, MoE expert-load
-vectors and data-shard stats feed the dissimilarity/disparity passes every
-``analyze_every`` steps (DESIGN.md §4).
+AutoAnalyzer is a first-class consumer: with ``TrainerConfig.trace`` set
+the trainer runs a *region-instrumented* step — the real jitted forward/
+backward and optimizer as leaves of a :class:`RegionTree`, executed once
+per emulated SPMD shard on that shard's slice of the batch — and records
+every step into a :class:`RegionTrace`.  The trace is the single source
+of truth: :class:`StragglerMonitor` observations are derived from its
+per-shard samples (not a private ``perf_counter`` path), ``run`` emits a
+portable ``.npz`` artifact, and ``scripts/analyze_trace.py`` replays the
+full analysis offline (the paper's collection/analysis split).
 """
 from __future__ import annotations
 
 import dataclasses
 import os
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -22,8 +28,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import (AutoAnalyzer, RegionTree, optics_cluster)
-from repro.data import DataConfig, device_batch
+from repro.core import (AutoAnalyzer, RegionTrace, RegionTree,
+                        TimedRegionRunner, WALL_TIME, optics_cluster)
+from repro.data import DataConfig, device_batch, host_batch
 from repro.models import build
 from repro.optim import AdamWConfig, apply_updates, init_opt_state
 from repro.sharding import activation_sharding, rules_for, tree_shardings
@@ -47,6 +54,64 @@ def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig) -> Callable:
     return train_step
 
 
+def train_region_tree(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                      iterated: bool = False) -> RegionTree:
+    """The real training step as a code-region tree (paper §2 applied to
+    the train loop): ``train/{fwd_bwd, optimizer}`` leaves threading a
+    stable ``{params, opt_state, grads, loss}`` state pytree, runnable by
+    :class:`TimedRegionRunner` once per emulated shard.
+
+    With ``iterated=True`` the forward/backward leaf is wrapped in
+    :func:`repro.scenarios.faults.iterated_work`, so shard data arrives
+    as ``(batch, iters)`` bundles and a shard carrying a larger ``iters``
+    genuinely executes more jitted work — the corpus fault-injection
+    hook on real model steps."""
+    api = build(cfg)
+
+    def fwd_bwd(state, batch):
+        # Accumulate into the carried grads (zero on step entry; the
+        # optimizer region resets them).  For a plain step this is
+        # `grads = 0 + grads` — identical to overwriting — but it gives
+        # iterated execution a carry dependency XLA cannot hoist out of
+        # the fori_loop.
+        (total, info), grads = jax.value_and_grad(
+            api.loss_fn, has_aux=True)(state["params"], batch)
+        acc = jax.tree.map(lambda a, g: a + g, state["grads"], grads)
+        return {**state, "grads": acc, "loss": info["loss"]}
+
+    def optimizer(state, batch):
+        new_params, new_opt, _ = apply_updates(
+            opt_cfg, state["params"], state["grads"], state["opt_state"])
+        return {**state, "params": new_params, "opt_state": new_opt,
+                "grads": jax.tree.map(jnp.zeros_like, state["grads"])}
+
+    tree = RegionTree("train")
+    if iterated:
+        # Lazy import: scenarios.corpus imports repro.train for the train
+        # backend, so the reverse edge must not exist at module scope.
+        from repro.scenarios.faults import iterated_work
+
+        def fwd_bwd_micro(state, bundle):
+            # Each iteration grads a batch rolled by the loop index: the
+            # values are permutation-invariant (mean over the batch dim)
+            # but the computation is index-dependent, so loop-invariant
+            # code motion cannot collapse N iterations into one.
+            batch, i = bundle
+            rolled = {k: jnp.roll(v, i, axis=0) for k, v in batch.items()}
+            return fwd_bwd(state, rolled)
+
+        tree.add("fwd_bwd", fn=iterated_work(fwd_bwd_micro, indexed=True))
+
+        def optimizer_b(state, bundle):
+            batch, _ = bundle
+            return optimizer(state, batch)
+        tree.add("optimizer", fn=optimizer_b)
+    else:
+        tree.add("fwd_bwd", fn=fwd_bwd)
+        tree.add("optimizer", fn=optimizer)
+    return tree
+
+
 def make_eval_step(cfg: ModelConfig) -> Callable:
     api = build(cfg)
 
@@ -66,6 +131,24 @@ class TrainerConfig:
     analyze_every: int = 0         # 0 = off
     seed: int = 0
     straggler_threshold: float = 1.75  # step_time > thr × running median
+    # -- region-instrumented (traced) mode --------------------------------
+    trace: bool = False            # run the region-instrumented step
+    trace_path: Optional[str] = None   # save the merged artifact here
+    trace_shards: int = 4          # emulated SPMD shards
+    trace_repeats: int = 1         # timing repeats per (region, shard)
+    # Per-shard fwd_bwd iteration counts (fault-injection hook: a shard
+    # with more iterations genuinely executes more jitted work).
+    trace_iters: Optional[Tuple[int, ...]] = None
+    trace_meta: Optional[Dict[str, Any]] = None  # merged into the header
+
+    def __post_init__(self) -> None:
+        if self.trace_path or self.trace_iters:
+            self.trace = True
+        if self.trace_iters is not None and \
+                len(self.trace_iters) != self.trace_shards:
+            raise ValueError(
+                f"trace_iters has {len(self.trace_iters)} entries for "
+                f"{self.trace_shards} shards")
 
 
 class StragglerMonitor:
@@ -118,6 +201,70 @@ class Trainer:
         step_fn = make_train_step(self.cfg, self.opt_cfg)
         self.train_step = jax.jit(step_fn, donate_argnums=(0, 1))
         self.step = 0
+        self.trace: Optional[RegionTrace] = None
+        self._step_traces: List[RegionTrace] = []
+        if self.tcfg.trace:
+            self.region_tree = train_region_tree(
+                self.cfg, self.opt_cfg,
+                iterated=self.tcfg.trace_iters is not None)
+            # warmup=1: the first jitted call pays trace+compile (the
+            # explicit lower().compile() does not seed jit's dispatch
+            # cache), which would otherwise be recorded as shard 0's
+            # step-0 sample — a ~500x artifact that reads as a shard-0
+            # straggler.  Warmup outputs are discarded, so training
+            # state still advances exactly once per step.
+            self.runner = TimedRegionRunner(self.region_tree, warmup=1,
+                                            repeats=self.tcfg.trace_repeats)
+            zero_grads = jax.tree.map(jnp.zeros_like, self.params)
+            # Replicated start: every emulated shard trains its own copy
+            # of the same initial state on its slice of the global batch —
+            # the single-host stand-in for per-rank SPMD execution that
+            # TimedRegionRunner already uses.
+            self._shard_states = [
+                {"params": self.params, "opt_state": self.opt_state,
+                 "grads": zero_grads, "loss": jnp.float32(0.0)}
+                for _ in range(self.tcfg.trace_shards)]
+
+    def _traced_step(self, step: int) -> Dict[str, Any]:
+        """One region-instrumented step over all emulated shards; appends
+        the per-step trace and feeds the StragglerMonitor from it."""
+        m = self.tcfg.trace_shards
+        data = []
+        for i in range(m):
+            b = host_batch(self.data_cfg, step, n_shards=m, shard=i)
+            batch = {k: jnp.asarray(v) for k, v in b.items()}
+            if self.tcfg.trace_iters is not None:
+                data.append((batch, jnp.int32(self.tcfg.trace_iters[i])))
+            else:
+                data.append(batch)
+        step_trace = self.runner.run_trace(self._shard_states, data)
+        self._shard_states = self.runner.final_states
+        self._step_traces.append(step_trace)
+        rm = step_trace.reduce()
+        per_shard = rm.metric(WALL_TIME).sum(axis=1)   # (m,) step seconds
+        # SPMD semantics: the step ends when the slowest shard does.
+        seconds = float(per_shard.max())
+        self.monitor.observe_step(step, seconds, per_shard=per_shard)
+        # Shard 0 is the canonical replica (checkpoints resume from it).
+        self.params = self._shard_states[0]["params"]
+        self.opt_state = self._shard_states[0]["opt_state"]
+        return {"step": step,
+                "loss": float(self._shard_states[0]["loss"]),
+                "seconds": seconds,
+                "per_shard_seconds": [float(x) for x in per_shard]}
+
+    def finalize_trace(self) -> Optional[RegionTrace]:
+        """Merge the per-step traces into one artifact (saved to
+        ``trace_path`` when set) and expose it as ``self.trace``."""
+        if not self._step_traces:
+            return None
+        self.trace = RegionTrace.merge(self._step_traces)
+        self.trace.meta["collector"] = "train"
+        self.trace.meta.update(self.tcfg.trace_meta or {})
+        self.trace.meta["straggler_events"] = len(self.monitor.events)
+        if self.tcfg.trace_path:
+            self.trace.save(self.tcfg.trace_path)
+        return self.trace
 
     # -- checkpoint/resume --------------------------------------------------
     def maybe_resume(self) -> bool:
@@ -147,22 +294,28 @@ class Trainer:
         steps = steps if steps is not None else self.tcfg.steps
         end = self.step + steps
         while self.step < end:
-            batch = device_batch(self.data_cfg, self.step)
             if fail_at is not None and self.step == fail_at:
                 raise RuntimeError(f"injected failure at step {self.step}")
-            t0 = time.perf_counter()
-            self.params, self.opt_state, metrics = self.train_step(
-                self.params, self.opt_state, batch)
-            loss = float(metrics["loss"])
-            dt = time.perf_counter() - t0
-            self.monitor.observe_step(self.step, dt)
-            rec = {"step": self.step, "loss": loss, "seconds": dt,
-                   "grad_norm": float(metrics["grad_norm"])}
-            if "expert_counts" in metrics:
-                rec["expert_counts"] = np.asarray(metrics["expert_counts"])
+            if self.tcfg.trace:
+                rec = self._traced_step(self.step)
+            else:
+                batch = device_batch(self.data_cfg, self.step)
+                t0 = time.perf_counter()
+                self.params, self.opt_state, metrics = self.train_step(
+                    self.params, self.opt_state, batch)
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                self.monitor.observe_step(self.step, dt)
+                rec = {"step": self.step, "loss": loss, "seconds": dt,
+                       "grad_norm": float(metrics["grad_norm"])}
+                if "expert_counts" in metrics:
+                    rec["expert_counts"] = np.asarray(
+                        metrics["expert_counts"])
             self.history.append(rec)
             self.step += 1
             if self.tcfg.ckpt_every and self.step % self.tcfg.ckpt_every == 0:
                 self.save()
         self.save()
+        if self.tcfg.trace:
+            self.finalize_trace()
         return self.history

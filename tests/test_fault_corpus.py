@@ -10,18 +10,21 @@ from repro.scenarios import faults as F
 
 SYNTHETIC = [e.name for e in corpus_entries(backend="synthetic")]
 RUNTIME = [e.name for e in corpus_entries(backend="runtime")]
+TRAIN = [e.name for e in corpus_entries(backend="train")]
 
 
 def test_registry_shape():
     """The corpus spans the paper's applications plus the repo's model
-    configs, across both bottleneck kinds and both backends."""
+    configs, across both bottleneck kinds and all three backends."""
     assert len(CORPUS) >= 12
     apps = {e.app for e in CORPUS.values()}
-    assert {"st", "npar1way", "mpibzip2", "moe", "transformer"} <= apps
+    assert {"st", "npar1way", "mpibzip2", "moe", "transformer",
+            "train"} <= apps
     kinds = {e.truth.kind for e in CORPUS.values()}
     assert {"dissimilarity", "disparity", "both"} <= kinds
     assert len(SYNTHETIC) >= 12
     assert RUNTIME  # at least one real-execution entry
+    assert TRAIN    # at least one real-training-loop entry
 
 
 @pytest.mark.parametrize("name", SYNTHETIC)
@@ -73,6 +76,22 @@ def test_runtime_entry_recovers_ground_truth(name):
     assert r.verdict.dissimilar
     assert r.recall == 1.0, (
         f"{name}: missed {sorted(r.missed)}; found {sorted(r.found)}")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", TRAIN)
+def test_train_entry_recovers_ground_truth(name):
+    """The real training loop, region-instrumented: designated shards
+    genuinely execute more fwd_bwd iterations inside the jitted step, the
+    Trainer emits a RegionTrace, and the analysis names the culprit
+    region.  Retried once like the runtime backend (wall-clock)."""
+    r = run_entry_robust(CORPUS[name], seed=0)
+    assert r.verdict.dissimilar
+    assert r.recall == 1.0, (
+        f"{name}: missed {sorted(r.missed)}; found {sorted(r.found)}")
+    # the retry fix: every attempt's wall time is reported
+    assert len(r.attempt_walls) >= 1
+    assert all(w > 0 for w in r.attempt_walls)
 
 
 def test_fault_composition_order_independent():
