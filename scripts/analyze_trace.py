@@ -25,20 +25,6 @@ import json
 import sys
 
 
-def verdict_doc(verdict) -> dict:
-    return {
-        "dissimilar": verdict.dissimilar,
-        "dissimilarity_paths": sorted(verdict.dissimilarity_paths),
-        "dissimilarity_ccr_paths": sorted(verdict.dissimilarity_ccr_paths),
-        "disparity_paths": sorted(verdict.disparity_paths),
-        "disparity_ccr_paths": sorted(verdict.disparity_ccr_paths),
-        "cause_attributes": sorted(verdict.cause_attributes),
-        "dissimilarity_cause_attributes":
-            sorted(verdict.dissimilarity_cause_attributes),
-        "per_path_causes": [[p, list(a)] for p, a in verdict.per_path_causes],
-    }
-
-
 def parse_window(spec: str):
     start, _, stop = spec.partition(":")
     return (int(start) if start else 0, int(stop) if stop else None)
@@ -82,7 +68,7 @@ def main(argv=None) -> int:
         label = (f"steps [{w[0]}:{w[1] if w[1] is not None else trace.n_steps})"
                  if w else f"all {trace.n_steps} steps")
         if args.json:
-            docs.append({"window": label, "verdict": verdict_doc(res.verdict)})
+            docs.append({"window": label, "verdict": res.verdict.doc()})
         else:
             print(f"== {args.trace}: {trace.n_processes} shards x "
                   f"{len(trace.region_ids)} regions, {label} "

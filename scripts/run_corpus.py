@@ -28,9 +28,17 @@ def main(argv=None) -> int:
                     help="save each train-backend entry's RegionTrace "
                          "artifact here (one training run serves both the "
                          "gate and the artifact)")
+    ap.add_argument("--train-spool-dir", default=None, metavar="DIR",
+                    help="collect train-backend entries through a "
+                         "TraceSpool under this base directory (streaming "
+                         "collection; each run's spool path is printed so "
+                         "CI can replay/byte-compare it)")
     args = ap.parse_args(argv)
 
     from repro.scenarios import run_entry_robust, select_entries
+    if args.train_spool_dir:
+        from repro.scenarios import corpus as corpus_mod
+        corpus_mod.TRAIN_SPOOL_BASE = args.train_spool_dir
 
     try:
         entries = select_entries(backend=args.backend, names=args.entry)
@@ -54,21 +62,27 @@ def main(argv=None) -> int:
                                 e.name.replace("/", "-") + ".npz")
             os.makedirs(args.train_trace_dir, exist_ok=True)
             print(f"saved trace artifact: {trace.save(path)}")
+        if args.train_spool_dir and e.backend == "train":
+            # the kept run's spool (a retry spools separately)
+            print(f"spool: {e.name} -> "
+                  f"{r.collector.trainer.tcfg.trace_spool_dir}")
     if not results:
         print("no entries selected", file=sys.stderr)
         return 2
     wname = max(len(r.entry.name) for r, _ in results) + 2
     print(f"{'entry':{wname}s} {'kind':13s} {'prec':>6s} {'recall':>6s} "
-          f"{'causes':>6s} {'wall_s':>7s}  status")
-    print("-" * (wname + 52))
+          f"{'causes':>6s} {'onset':>7s} {'wall_s':>7s}  status")
+    print("-" * (wname + 60))
     failures = 0
     for r, walls in results:
         status = "ok" if r.passed else "FAIL"
         if not r.passed:
             failures += 1
+        want = r.entry.expect_onset_window
+        onset = "-" if want is None else f"{r.onset_window}/{want}"
         print(f"{r.entry.name:{wname}s} {r.entry.truth.kind:13s} "
               f"{r.precision:6.2f} {r.recall:6.2f} {r.cause_recall:6.2f} "
-              f"{sum(walls):7.3f}  {status}")
+              f"{onset:>7s} {sum(walls):7.3f}  {status}")
         if len(walls) > 1:
             # a retried wall-clock entry: report every attempt, not just
             # the one whose result was kept
@@ -83,7 +97,7 @@ def main(argv=None) -> int:
             print(f"{'':{wname}s}   causes wanted {sorted(want)}, "
                   f"got {sorted(r.causes_found)} at the planted paths "
                   f"(globally: {sorted(r.verdict.cause_attributes)})")
-    print("-" * (wname + 52))
+    print("-" * (wname + 60))
     print(f"{len(results) - failures}/{len(results)} entries passed "
           f"(seed {args.seed})")
     return 1 if failures else 0

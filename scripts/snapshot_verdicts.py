@@ -34,17 +34,8 @@ def snapshot(seed: int) -> dict:
         tree, collector = entry.build(seed)
         analyzer = AutoAnalyzer(tree, **dict(entry.analyzer_kw))
         res = analyzer.analyze_collector(collector)
-        v = res.verdict
         out[entry.name] = {
-            "dissimilar": v.dissimilar,
-            "dissimilarity_paths": sorted(v.dissimilarity_paths),
-            "dissimilarity_ccr_paths": sorted(v.dissimilarity_ccr_paths),
-            "disparity_paths": sorted(v.disparity_paths),
-            "disparity_ccr_paths": sorted(v.disparity_ccr_paths),
-            "cause_attributes": sorted(v.cause_attributes),
-            "dissimilarity_cause_attributes":
-                sorted(v.dissimilarity_cause_attributes),
-            "per_path_causes": [[p, list(a)] for p, a in v.per_path_causes],
+            **res.verdict.doc(),
             "dissimilarity_severity": res.dissimilarity.severity,
             "composite_s": res.dissimilarity.composite_s,
             "baseline_n_clusters": res.dissimilarity.baseline.n_clusters,

@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Tail a trace spool — live or finished — and stream per-window verdicts.
+
+    PYTHONPATH=src python scripts/watch_train.py SPOOL_DIR
+    PYTHONPATH=src python scripts/watch_train.py SPOOL_DIR --follow
+    PYTHONPATH=src python scripts/watch_train.py SPOOL_DIR --window 8 --json
+    PYTHONPATH=src python scripts/watch_train.py SPOOL_DIR --finalize out.npz
+
+The collection side (a Trainer with ``trace_spool_dir`` set, or anything
+appending to a :class:`repro.stream.TraceSpool`) flushes step segments as
+the run goes; this script re-reads the spool manifest, runs the full
+AutoAnalyzer on each completed tumbling window, prints one verdict line
+per window, and reports the **onset**: the first window whose bottleneck
+verdict persisted ``--persist`` consecutive windows — so a drifting fault
+is localized in time while the run is still going.
+
+Analyzer keyword arguments default to the ``analyzer_kw`` the collector
+recorded in the trace header (same resolution as ``analyze_trace.py``)
+and can be overridden with ``--analyzer-kw '{"threshold_frac": 0.2}'``.
+
+``--follow`` keeps polling until the producer closes the spool; without it
+the script processes everything flushed so far and exits (nonzero if the
+spool is still incomplete, so CI can assert it saw a whole run).
+``--finalize PATH`` converts the complete spool into the classic
+single-``.npz`` artifact — byte-identical to the monolithic save of the
+same run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def window_line(wv) -> str:
+    kinds = ",".join(sorted(wv.kinds)) or "-"
+    paths = ",".join(wv.paths()) or "-"
+    return (f"window {wv.index:3d}  steps [{wv.start}:{wv.stop})  "
+            f"{kinds:26s} {paths}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("spool", help="spool directory (contains spool.json)")
+    ap.add_argument("--window", type=int, default=4, metavar="N",
+                    help="tumbling window size in steps (default 4)")
+    ap.add_argument("--stride", type=int, default=None, metavar="N",
+                    help="window stride (default: window size)")
+    ap.add_argument("--persist", type=int, default=2, metavar="K",
+                    help="consecutive flagged windows that define onset")
+    ap.add_argument("--kind", choices=("dissimilarity", "disparity"),
+                    default=None,
+                    help="restrict onset detection to one bottleneck kind")
+    ap.add_argument("--analyzer-kw", default=None, metavar="JSON",
+                    help="AutoAnalyzer kwargs, overriding the trace header")
+    ap.add_argument("--follow", action="store_true",
+                    help="keep polling until the producer closes the spool")
+    ap.add_argument("--interval", type=float, default=1.0, metavar="SEC",
+                    help="poll interval with --follow (default 1s)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit one JSON document instead of text lines")
+    ap.add_argument("--finalize", default=None, metavar="PATH",
+                    help="after a complete run, write the classic "
+                         "single-.npz artifact here (byte-identical to "
+                         "the monolithic save)")
+    args = ap.parse_args(argv)
+    if args.window < 1:
+        ap.error("--window must be a positive step count")
+
+    import os
+
+    from repro.stream import MANIFEST_NAME, OnlineAnalyzer, SpooledTrace
+
+    # A live run has no manifest until its first chunk flushes; --follow
+    # waits for it rather than dying at startup.  A *present* but invalid
+    # manifest (foreign file, newer version) still aborts.
+    while True:
+        try:
+            spooled = SpooledTrace(args.spool)
+            break
+        except ValueError as e:
+            missing = not os.path.exists(
+                os.path.join(args.spool, MANIFEST_NAME))
+            if not (args.follow and missing):
+                print(str(e), file=sys.stderr)
+                return 3
+            time.sleep(args.interval)
+    kw = json.loads(args.analyzer_kw) if args.analyzer_kw else None
+    online = OnlineAnalyzer(window_steps=args.window, stride=args.stride,
+                            persist=args.persist, analyzer_kw=kw)
+
+    while True:
+        for wv in online.poll(spooled):
+            if not args.json:
+                print(window_line(wv), flush=True)
+        if spooled.complete or not args.follow:
+            break
+        time.sleep(args.interval)
+
+    onset = online.onset_report(args.kind)
+    if args.json:
+        doc = {
+            "spool": args.spool,
+            "complete": spooled.complete,
+            "n_steps": spooled.n_steps,
+            "window_steps": args.window,
+            "persist": args.persist,
+            "windows": [{"index": wv.index, "steps": [wv.start, wv.stop],
+                         "kinds": sorted(wv.kinds),
+                         "verdict": wv.verdict.doc()}
+                        for wv in online.log.windows],
+            "onset": onset,
+        }
+        json.dump(doc, sys.stdout, indent=1, sort_keys=True)
+        print()
+    else:
+        if onset is not None:
+            print(f"onset: window {onset['onset_window']} (step "
+                  f"{onset['onset_step']}; kinds "
+                  f"{','.join(onset['kinds'])}; paths "
+                  f"{','.join(onset['paths']) or '-'})")
+        else:
+            print(f"onset: none ({len(online.log.windows)} windows, "
+                  f"persist {args.persist})")
+    if not spooled.complete:
+        print(f"{args.spool}: run still in progress "
+              f"({spooled.n_steps} steps flushed)", file=sys.stderr)
+        return 3
+    if args.finalize:
+        # stderr keeps --json stdout a single parseable document
+        print(f"finalized: {spooled.finalize(args.finalize)}",
+              file=sys.stderr if args.json else sys.stdout)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -58,6 +58,25 @@ class Verdict:
     dissimilarity_cause_attributes: FrozenSet[str]
     per_path_causes: Tuple[Tuple[str, Tuple[str, ...]], ...]
 
+    def doc(self) -> dict:
+        """Canonical JSON-ready form (sorted, sets -> lists) — the single
+        serialization every verdict-emitting surface shares
+        (``analyze_trace.py``, ``snapshot_verdicts.py``,
+        ``watch_train.py``), so committed snapshots never drift on
+        formatting."""
+        return {
+            "dissimilar": self.dissimilar,
+            "dissimilarity_paths": sorted(self.dissimilarity_paths),
+            "dissimilarity_ccr_paths": sorted(self.dissimilarity_ccr_paths),
+            "disparity_paths": sorted(self.disparity_paths),
+            "disparity_ccr_paths": sorted(self.disparity_ccr_paths),
+            "cause_attributes": sorted(self.cause_attributes),
+            "dissimilarity_cause_attributes":
+                sorted(self.dissimilarity_cause_attributes),
+            "per_path_causes": [[p, list(a)]
+                                for p, a in self.per_path_causes],
+        }
+
 
 @dataclasses.dataclass
 class AnalysisResult:

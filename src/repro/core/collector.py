@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -43,22 +43,79 @@ from .regions import CodeRegion, RegionTree
 from .trace import RegionTrace
 
 
-def _cpu_clock_tick() -> Optional[float]:
-    """Effective resolution of ``time.process_time``.
+def _measure_tick(clock: Callable[[], float],
+                  resolution: float) -> Optional[float]:
+    """Effective resolution of a CPU clock.
 
-    Some kernels advance the process CPU clock in ~10ms jiffies even though
-    ``get_clock_info`` advertises nanoseconds; measure the actual tick by
+    Some kernels advance CPU clocks in ~10ms jiffies even though the
+    advertised resolution is nanoseconds; measure the actual tick by
     spinning until the clock moves (bounded at 50ms of busy work).  Returns
     None when the clock never advanced — e.g. the spin itself got preempted
     — so a failed calibration is retried rather than trusted."""
-    info = time.get_clock_info("process_time").resolution
-    t0 = time.process_time()
+    t0 = clock()
     deadline = time.perf_counter() + 0.05
     while time.perf_counter() < deadline:
-        t1 = time.process_time()
+        t1 = clock()
         if t1 != t0:
-            return max(info, t1 - t0)
+            return max(resolution, t1 - t0)
     return None
+
+
+def _cpu_clock_tick() -> Optional[float]:
+    """Measured tick of ``time.process_time`` (the classic CPU clock)."""
+    return _measure_tick(time.process_time,
+                         time.get_clock_info("process_time").resolution)
+
+
+def _thread_clock_attributes_jax(clock: Callable[[], float],
+                                 tick: float) -> bool:
+    """Does jitted work accrue on the *calling* thread's CPU clock?
+
+    XLA:CPU may run compute on worker threads, in which case
+    ``CLOCK_THREAD_CPUTIME_ID`` of the timing thread reads ~0 for a region
+    that genuinely burned CPU — per-thread timing would then report every
+    compute region as idle.  Probe with a jitted matmul long enough to span
+    several ticks: accept the thread clock only when it observed at least
+    half the wall time."""
+    try:
+        import jax.numpy as jnp
+        f = jax.jit(lambda x: jnp.tanh(x @ x).sum())
+        x = jnp.ones((256, 256), jnp.float32)
+        jax.block_until_ready(f(x))                    # compile outside
+        budget = max(4.0 * tick, 0.02)
+        t0w, t0c = time.perf_counter(), clock()
+        while time.perf_counter() - t0w < budget:
+            jax.block_until_ready(f(x))
+        wall, cpu = time.perf_counter() - t0w, clock() - t0c
+        return cpu >= 0.5 * wall
+    except Exception:
+        return False
+
+
+def _pick_cpu_clock() -> Tuple[Callable[[], float], Optional[float], str]:
+    """Choose the CPU clock for region timing: ``(clock, tick, name)``.
+
+    Prefers the per-thread CPU clock (``CLOCK_THREAD_CPUTIME_ID``) over
+    ``time.process_time`` — but only when it is measurably *finer* than the
+    process clock's jiffy tick AND jitted work actually accrues on the
+    calling thread (see :func:`_thread_clock_attributes_jax`); otherwise
+    region timing keeps the process clock, whose coarse tick the
+    reduce-time snap (``RegionTrace.reduce``) already compensates for.  A
+    None tick means calibration failed this time and should be retried."""
+    process_tick = _cpu_clock_tick()
+    if hasattr(time, "clock_gettime") and \
+            hasattr(time, "CLOCK_THREAD_CPUTIME_ID"):
+        clk_id = time.CLOCK_THREAD_CPUTIME_ID
+
+        def thread_clock() -> float:
+            return time.clock_gettime(clk_id)
+
+        thread_tick = _measure_tick(thread_clock, time.clock_getres(clk_id))
+        if (thread_tick is not None
+                and (process_tick is None or thread_tick < process_tick)
+                and _thread_clock_attributes_jax(thread_clock, thread_tick)):
+            return thread_clock, thread_tick, "thread"
+    return time.process_time, process_tick, "process"
 
 
 class TimedRegionRunner:
@@ -72,14 +129,20 @@ class TimedRegionRunner:
     ``repeats`` measures each (region, shard) pair that many times and
     records the minimum (the classic noise-robust timing statistic —
     scheduler preemption only ever adds time), so load on the host does not
-    masquerade as process dissimilarity.  When a region's wall time is below the CPU clock's
-    effective tick the CPU delta is pure quantization noise (0 or one full
-    jiffy); the wall delta is recorded for CPU_TIME instead — on the
-    single-host emulated shards compute regions are CPU-bound, so wall is
-    the faithful stand-in.
+    masquerade as process dissimilarity.
+
+    The CPU clock is chosen once per process by :func:`_pick_cpu_clock`:
+    the per-thread clock when it is finer than ``time.process_time``'s
+    jiffy tick *and* jitted work accrues on the calling thread, else the
+    process clock.  Either way the measured tick lands in the trace header
+    (``cpu_tick``) and drives the reduce-time quantization guard: when a
+    region's wall time is below the tick the CPU delta is pure noise (0 or
+    one full jiffy) and the wall delta stands in — on the single-host
+    emulated shards compute regions are CPU-bound, so wall is faithful.
     """
 
-    _cpu_tick: Optional[float] = None  # class-level lazy cache
+    # class-level lazy cache: (clock, measured tick, clock name)
+    _cpu_clock: Optional[Tuple[Callable[[], float], float, str]] = None
 
     def __init__(self, tree: RegionTree, warmup: int = 1, repeats: int = 3):
         self.tree = tree
@@ -101,19 +164,25 @@ class TimedRegionRunner:
         regions = self._leaf_regions()
         m = len(shard_states)
         states = list(shard_states)
-        # Lazy: the tick measurement busy-spins up to 50ms, so pay it only
-        # when actually timing.  Cached once it succeeds; a failed
-        # calibration (None) falls back to the advertised resolution for
-        # this run and is re-attempted next time.
-        if TimedRegionRunner._cpu_tick is None:
-            TimedRegionRunner._cpu_tick = _cpu_clock_tick()
-        tick = (TimedRegionRunner._cpu_tick if TimedRegionRunner._cpu_tick
-                is not None else
-                time.get_clock_info("process_time").resolution)
+        # Lazy: clock selection busy-spins up to 50ms per candidate (plus
+        # a short jitted probe when the thread clock looks finer), so pay
+        # it only when actually timing.  Cached once calibration succeeds;
+        # a failed calibration (None tick) falls back to the advertised
+        # process-clock resolution for this run and is re-attempted next
+        # time.
+        if TimedRegionRunner._cpu_clock is None:
+            clock, tick, name = _pick_cpu_clock()
+            if tick is not None:
+                TimedRegionRunner._cpu_clock = (clock, tick, name)
+        else:
+            clock, tick, name = TimedRegionRunner._cpu_clock
+        if tick is None:
+            tick = time.get_clock_info("process_time").resolution
         trace = RegionTrace.for_tree(
             self.tree, [r.region_id for r in regions], m,
             n_steps=1, n_repeats=self.repeats,
-            meta={"collector": "runtime", "cpu_tick": tick, "derived": True})
+            meta={"collector": "runtime", "cpu_tick": tick,
+                  "cpu_clock": name, "derived": True})
         for r in regions:
             if r.region_id not in self._compiled:
                 jitted = jax.jit(r.fn)
@@ -130,10 +199,10 @@ class TimedRegionRunner:
                 for _ in range(self.warmup):
                     jax.block_until_ready(jitted(states[i], shard_data[i]))
                 for k in range(self.repeats):
-                    t0w, t0c = time.perf_counter(), time.process_time()
+                    t0w, t0c = time.perf_counter(), clock()
                     out = jax.block_until_ready(jitted(states[i],
                                                        shard_data[i]))
-                    t1w, t1c = time.perf_counter(), time.process_time()
+                    t1w, t1c = time.perf_counter(), clock()
                     trace.record(WALL_TIME, 0, k, i, r.region_id, t1w - t0w)
                     trace.record(CPU_TIME, 0, k, i, r.region_id, t1c - t0c)
                     trace.record(FLOPS, 0, k, i, r.region_id, flops)

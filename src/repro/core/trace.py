@@ -173,6 +173,30 @@ class RegionTrace:
             data={k: v[start:stop].copy() for k, v in self.data.items()},
             meta=dict(self.meta))
 
+    # Header meta keys that drive the reduction: traces disagreeing on
+    # one of these cannot be concatenated (the merged reduce() would be
+    # ambiguous).  Single source of truth for merge AND for streaming
+    # appends (repro.stream.TraceSpool).
+    REDUCTION_META_KEYS = ("cpu_tick", "derived")
+
+    @staticmethod
+    def check_mergeable(head: "RegionTrace", t: "RegionTrace") -> None:
+        """Raise ValueError when ``t`` cannot be concatenated after
+        ``head`` along the step axis."""
+        if (t.region_ids != head.region_ids
+                or t.n_processes != head.n_processes
+                or t.n_repeats != head.n_repeats):
+            raise ValueError("traces disagree on regions/processes/"
+                             "repeats; cannot merge")
+        if t.schema != head.schema:
+            raise ValueError("traces disagree on region schema")
+        for key in RegionTrace.REDUCTION_META_KEYS:
+            if t.meta.get(key) != head.meta.get(key):
+                raise ValueError(
+                    f"traces disagree on meta[{key!r}] "
+                    f"({head.meta.get(key)} vs {t.meta.get(key)}); "
+                    f"the merged reduction would be ambiguous")
+
     @classmethod
     def merge(cls, traces: Sequence["RegionTrace"]) -> "RegionTrace":
         """Concatenate traces along the step axis (e.g. one per training
@@ -181,19 +205,7 @@ class RegionTrace:
             raise ValueError("merge of zero traces")
         head = traces[0]
         for t in traces[1:]:
-            if (t.region_ids != head.region_ids
-                    or t.n_processes != head.n_processes
-                    or t.n_repeats != head.n_repeats):
-                raise ValueError("traces disagree on regions/processes/"
-                                 "repeats; cannot merge")
-            if t.schema != head.schema:
-                raise ValueError("traces disagree on region schema")
-            for key in ("cpu_tick", "derived"):
-                if t.meta.get(key) != head.meta.get(key):
-                    raise ValueError(
-                        f"traces disagree on meta[{key!r}] "
-                        f"({head.meta.get(key)} vs {t.meta.get(key)}); "
-                        f"the merged reduction would be ambiguous")
+            cls.check_mergeable(head, t)
         names = sorted({k for t in traces for k in t.data})
         data = {k: np.concatenate([t.metric(k) for t in traces], axis=0)
                 for k in names}
@@ -245,7 +257,14 @@ class RegionTrace:
     # -- artifact I/O ------------------------------------------------------
     def save(self, path: str) -> str:
         """Write the compact artifact: JSON header + one array per metric
-        inside a single ``.npz``."""
+        inside a single ``.npz``.
+
+        Canonical and deterministic: members are written in sorted metric
+        order (not dict insertion order) and ``np.savez_compressed`` pins
+        zip timestamps — so any two traces holding the same samples and
+        header produce the same bytes, which is what lets a streamed
+        spool :meth:`~repro.stream.SpooledTrace.finalize` byte-identically
+        to the monolithic save of the same run."""
         header = {
             "format": "repro.region_trace",
             "version": TRACE_FORMAT_VERSION,
@@ -257,7 +276,7 @@ class RegionTrace:
             "meta": self.meta,
             "metrics": sorted(self.data),
         }
-        payload = {f"metric:{k}": v for k, v in self.data.items()}
+        payload = {f"metric:{k}": self.data[k] for k in sorted(self.data)}
         with open(path, "wb") as f:
             np.savez_compressed(f, __header__=json.dumps(header),
                                 **payload)

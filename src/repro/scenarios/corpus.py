@@ -30,6 +30,7 @@ regression gate.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any, Callable, Dict, FrozenSet, List, Optional, Tuple
 
@@ -38,6 +39,7 @@ from repro.core import (COMM_BYTES, FLOPS, HBM_INTENSITY, HOST_BYTES,
                         RegionBehavior, RegionMetrics, RegionTrace,
                         RegionTree, SyntheticWorkload, TimedRegionRunner,
                         Verdict, st_region_tree)
+from repro.stream import OnlineAnalyzer
 
 from . import faults as F
 
@@ -70,6 +72,14 @@ class CorpusEntry:
     # entry reads 0.5).  Wall-clock backends (runtime/train) keep explicit
     # wider floors.
     min_precision: float = 0.9
+    # -- time localization (streaming layer, docs/streaming.md) -----------
+    # When set, the entry's trace is additionally replayed through an
+    # OnlineAnalyzer in onset_window_steps-step tumbling windows, and the
+    # detected onset window (first window whose bottleneck verdict
+    # persists onset_persist windows) must equal this id.
+    expect_onset_window: Optional[int] = None
+    onset_window_steps: int = 4
+    onset_persist: int = 2
 
 
 CORPUS: Dict[str, CorpusEntry] = {}
@@ -110,12 +120,15 @@ class FaultedSyntheticCollector:
         self.seed = seed
         self.m = n_processes
         self.n_steps = n_steps
+        self.last_trace: Optional[RegionTrace] = None
 
     def collect_trace(self) -> RegionTrace:
         wl = SyntheticWorkload(self.tree, self.behaviors, self.m,
                                seed=self.seed)
-        return F.inject_trace(self.tree, wl.collect_trace(self.n_steps),
-                              self.faults, seed=self.seed)
+        self.last_trace = F.inject_trace(
+            self.tree, wl.collect_trace(self.n_steps), self.faults,
+            seed=self.seed)
+        return self.last_trace
 
     def collect(self) -> RegionMetrics:
         return self.collect_trace().reduce()
@@ -161,6 +174,10 @@ class TrainFaultCollector:
     def collect(self) -> RegionMetrics:
         self.trainer.run()
         return self.trainer.trace.reduce()
+
+    @property
+    def last_trace(self) -> Optional[RegionTrace]:
+        return self.trainer.trace
 
 
 # -- balanced baseline workloads -----------------------------------------
@@ -280,13 +297,36 @@ def _model_synthetic(arch: str, *fault_list):
 
 _TRAIN_KW = (("threshold_frac", 0.45),)
 
+# When set (scripts/run_corpus.py --train-spool-dir), every train-backend
+# entry collects through a TraceSpool under this base directory instead of
+# accumulating step traces in memory — the CI spool round-trip gate runs
+# the identical smoke train through the streaming path.
+TRAIN_SPOOL_BASE: Optional[str] = None
+_SPOOL_SEQ = [0]
 
-def _train(iters_per_shard: Tuple[int, ...], steps: int = 2,
-           arch: str = "st-100m", repeats: int = 1):
+
+def _spool_dir(arch: str, seed: int) -> Optional[str]:
+    if TRAIN_SPOOL_BASE is None:
+        return None
+    _SPOOL_SEQ[0] += 1   # unique per build: retries must not collide
+    return os.path.join(TRAIN_SPOOL_BASE,
+                        f"{arch}-seed{seed}-{_SPOOL_SEQ[0]:03d}")
+
+
+def _train(iters_per_shard: Optional[Tuple[int, ...]] = None,
+           steps: int = 2, arch: str = "st-100m", repeats: int = 1,
+           expert_iters: Optional[Tuple[Tuple[int, ...], ...]] = None):
     """Builder for the train backend: a region-instrumented smoke Trainer
-    whose per-shard fwd_bwd iteration counts carry the injected straggler.
-    The trainer (and its jitted regions) is built at corpus-build time so
-    the entry can expose the region tree before any execution."""
+    whose per-shard fwd_bwd iteration counts (``iters_per_shard``) and/or
+    per-(shard, expert) probe counts (``expert_iters``, MoE configs) carry
+    the injected fault.  The trainer (and its jitted regions) is built at
+    corpus-build time so the entry can expose the region tree before any
+    execution."""
+    if iters_per_shard is None and expert_iters is None:
+        raise ValueError("need iters_per_shard and/or expert_iters")
+    shards = (len(iters_per_shard) if iters_per_shard is not None
+              else len(expert_iters))
+
     def build(seed: int):
         from repro.configs import get_arch
         from repro.data import DataConfig
@@ -295,13 +335,18 @@ def _train(iters_per_shard: Tuple[int, ...], steps: int = 2,
         cfg = get_arch(arch).smoke
         trainer = Trainer(
             cfg, AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50),
-            DataConfig(seq_len=32, global_batch=2 * len(iters_per_shard),
+            DataConfig(seq_len=32, global_batch=2 * shards,
                        vocab=cfg.vocab),
             TrainerConfig(steps=steps, ckpt_dir=None, ckpt_every=0,
                           seed=seed, trace=True,
-                          trace_shards=len(iters_per_shard),
-                          trace_iters=tuple(iters_per_shard),
+                          trace_shards=shards,
+                          trace_iters=(tuple(iters_per_shard)
+                                       if iters_per_shard is not None
+                                       else None),
+                          trace_expert_iters=expert_iters,
                           trace_repeats=repeats,
+                          trace_spool_dir=_spool_dir(arch, seed),
+                          trace_chunk_steps=1,
                           trace_meta={"analyzer_kw": dict(_TRAIN_KW)}))
         return trainer.region_tree, TrainFaultCollector(trainer)
     return build
@@ -355,11 +400,17 @@ class CorpusRunResult:
     # it produced (e.g. the train backend's RegionTrace) without
     # re-collecting
     collector: Any = None
+    # onset window the OnlineAnalyzer detected (None when the entry does
+    # not assert time localization)
+    onset_window: Optional[int] = None
 
     @property
     def passed(self) -> bool:
         return (self.recall == 1.0 and self.cause_recall == 1.0
-                and self.precision >= self.entry.min_precision)
+                and self.precision >= self.entry.min_precision
+                and (self.entry.expect_onset_window is None
+                     or self.onset_window
+                     == self.entry.expect_onset_window))
 
 
 def _related(a: str, b: str) -> bool:
@@ -408,12 +459,29 @@ def score_verdict(entry: CorpusEntry, verdict: Verdict) -> CorpusRunResult:
 
 
 def run_entry(entry: CorpusEntry, seed: int = 0) -> CorpusRunResult:
-    """Build the scenario and pipe it end-to-end through AutoAnalyzer."""
+    """Build the scenario and pipe it end-to-end through AutoAnalyzer.
+
+    Entries asserting ``expect_onset_window`` additionally replay the
+    collected trace through an :class:`OnlineAnalyzer` in tumbling
+    windows — the same trace the whole-run verdict came from, so the
+    onset check costs no extra collection."""
     tree, collector = entry.build(seed)
     analyzer = AutoAnalyzer(tree, **dict(entry.analyzer_kw))
     result = analyzer.analyze_collector(collector)
     r = score_verdict(entry, result.verdict)
     r.collector = collector
+    if entry.expect_onset_window is not None:
+        online = OnlineAnalyzer(tree=tree,
+                                window_steps=entry.onset_window_steps,
+                                persist=entry.onset_persist,
+                                analyzer_kw=dict(entry.analyzer_kw))
+        online.process_trace(collector.last_trace)
+        # Onset of the *planted* kind: a standing benign verdict of the
+        # other kind (e.g. the clean-ST inclusive-parent disparity the
+        # severity banding is known to flag) must not mask when the
+        # injected fault begins.
+        kind = None if entry.truth.kind == "both" else entry.truth.kind
+        r.onset_window = online.onset(kind)
     return r
 
 
@@ -664,6 +732,26 @@ register_entry(CorpusEntry(
 ))
 
 register_entry(CorpusEntry(
+    name="st/triple-straggler-thrash-stall",
+    app="st", backend="synthetic",
+    description="Three simultaneous bottlenecks: rank 6 does 5x the cr5 "
+                "solver work, nested cr11 starts thrashing HBM on every "
+                "rank, and rank 2 owns an 80GB checkpoint stall in cr10 "
+                "— the analyzer must separate two distinct dissimilarity "
+                "culprits from a global disparity in one pass",
+    build=_synthetic(baseline_st,
+                     F.ComputeStraggler("ST/cr5", procs=(6,), factor=5.0),
+                     F.CacheThrash("ST/cr14/cr11", slowdown=5.0,
+                                   byte_factor=10.0),
+                     F.CheckpointStall("ST/cr10", proc=2,
+                                       extra_bytes=80e9, stall=5.0)),
+    truth=GroundTruth("both",
+                      frozenset({"ST/cr5", "ST/cr14/cr11", "ST/cr10"}),
+                      frozenset({FLOPS, HBM_INTENSITY, HOST_BYTES})),
+    analyzer_kw=(("similarity_metric", WALL_TIME),),
+))
+
+register_entry(CorpusEntry(
     name="st/thermal-throttle-cr5",
     app="st", backend="synthetic",
     description="Rank 1's chip down-clocks progressively over a 12-step "
@@ -677,9 +765,26 @@ register_entry(CorpusEntry(
     truth=GroundTruth("dissimilarity", frozenset({"ST/cr5"})),
 ))
 
+register_entry(CorpusEntry(
+    name="st/thermal-drift-onset",
+    app="st", backend="synthetic",
+    description="Rank 1 holds full clock for 8 steps of a 16-step run, "
+                "then down-clocks toward 4x: the OnlineAnalyzer must "
+                "localize the fault in time (onset at window 2 = steps "
+                "[8,12) of 4-step windows) as well as locate ST/cr5",
+    build=_synthetic(baseline_st,
+                     F.ThermalThrottleDrift("ST/cr5", procs=(1,),
+                                            peak_factor=4.0, onset_step=8),
+                     n_steps=16),
+    truth=GroundTruth("dissimilarity", frozenset({"ST/cr5"})),
+    expect_onset_window=2, onset_window_steps=4, onset_persist=2,
+))
+
 # Train backend: a real smoke training run through the region-instrumented
 # Trainer.  Shard 3's fwd_bwd genuinely executes 12x the iterations inside
-# the jitted step; the wide threshold_frac absorbs wall-clock noise.
+# the jitted step; the wide threshold_frac absorbs wall-clock noise.  The
+# fault is present from step 0, so the per-step window stream must flag it
+# from window 0 onward (onset in *time* checked on a real run too).
 register_entry(CorpusEntry(
     name="train/fwdbwd-straggler-smoke",
     app="train", backend="train",
@@ -688,6 +793,26 @@ register_entry(CorpusEntry(
                 "fwd/bwd + optimizer, trace-collected)",
     build=_train(iters_per_shard=(1, 1, 1, 12), steps=2),
     truth=GroundTruth("dissimilarity", frozenset({"train/fwd_bwd"})),
+    analyzer_kw=_TRAIN_KW,
+    min_precision=0.2,
+    expect_onset_window=0, onset_window_steps=1, onset_persist=2,
+))
+
+# MoE smoke train: per-expert probe regions in the instrumented tree run
+# each expert's FFN its routed share of iterations inside the jitted step
+# — a routing collapse toward expert 1 (12x the iterations on every
+# shard) surfaces as a disparity on the expert's own region.
+register_entry(CorpusEntry(
+    name="train/moe-routing-collapse-smoke",
+    app="train", backend="train",
+    description="Region-instrumented mixtral-smoke Trainer run with "
+                "per-expert probe regions: every shard over-routes to "
+                "expert 1 (48 vs 4 probe iterations), a real-execution "
+                "routing collapse localized to train/moe/expert_1",
+    build=_train(expert_iters=tuple(
+        tuple(48 if e == 1 else 4 for e in range(4))
+        for _ in range(4)), steps=2, arch="mixtral-8x22b"),
+    truth=GroundTruth("disparity", frozenset({"train/moe/expert_1"})),
     analyzer_kw=_TRAIN_KW,
     min_precision=0.2,
 ))

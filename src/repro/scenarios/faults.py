@@ -412,12 +412,18 @@ class ThermalThrottleDrift:
     """Designated processes slow down progressively across the run — a
     chip heating up and down-clocking (time-varying, so only the trace
     layer's per-step axis can express it; a single-snapshot collection
-    sees just the average).  Per step ``s`` the throttled processes'
-    wall *and* CPU time in ``region`` scale by
+    sees just the average).  The chip runs at full clock until
+    ``onset_step`` (heat soak), then ramps linearly: per step
+    ``s >= onset_step`` the throttled processes' wall *and* CPU time in
+    ``region`` scale by
 
-        1 + (peak_factor - 1) * ((s + 1) / n_steps)
+        1 + (peak_factor - 1) * ((s - onset_step + 1)
+                                 / (n_steps - onset_step))
 
-    — a linear ramp reaching ``peak_factor`` at the final step.  Same
+    reaching ``peak_factor`` at the final step (``onset_step=0``, the
+    default, is the original whole-run ramp, bit-for-bit).  The onset
+    step is what the streaming layer's :class:`~repro.stream.
+    OnlineAnalyzer` must localize in time (docs/streaming.md).  Same
     instructions, lower clock: no quantity metric inflates, so (like
     :class:`CollectiveStraggler`) ``causes`` is empty; unlike the pure-
     waiting archetypes the CPU clock stretches too, so the default
@@ -426,11 +432,15 @@ class ThermalThrottleDrift:
     region: str
     procs: Tuple[int, ...]
     peak_factor: float = 4.0
+    onset_step: int = 0
     kind: ClassVar[str] = DISSIMILARITY
     causes: ClassVar[FrozenSet[str]] = frozenset()
 
     def apply_trace(self, tree: RegionTree, trace: RegionTrace,
                     rng: np.random.Generator) -> None:
+        if not (0 <= self.onset_step < trace.n_steps):
+            raise ValueError(f"onset_step {self.onset_step} outside the "
+                             f"{trace.n_steps}-step run")
         rid = tree.by_path(self.region).region_id
         j = trace.col(rid)
         # _ancestor_cols only needs .col(), which RegionTrace shares with
@@ -438,8 +448,9 @@ class ThermalThrottleDrift:
         anc = _ancestor_cols(tree, trace, rid)
         mask = np.zeros(trace.n_processes)
         mask[list(self.procs)] = 1.0
-        for s in range(trace.n_steps):
-            ramp = (self.peak_factor - 1.0) * (s + 1) / trace.n_steps
+        for s in range(self.onset_step, trace.n_steps):
+            ramp = (self.peak_factor - 1.0) * (s - self.onset_step + 1) \
+                / (trace.n_steps - self.onset_step)
             factors = 1.0 + mask * ramp
             for metric in (WALL_TIME, CPU_TIME):
                 M = trace.metric(metric)[s]          # (R, m, n) view

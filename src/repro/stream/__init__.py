@@ -1,0 +1,20 @@
+"""Streaming trace collection + online windowed analysis.
+
+``spool``  — :class:`TraceSpool` (bounded-memory segment writer) and
+             :class:`SpooledTrace` (lazy reader / window reassembly /
+             byte-identical finalize).
+``online`` — :class:`OnlineAnalyzer` (per-window AutoAnalyzer verdicts as
+             the spool grows) and :class:`WindowVerdictLog` (onset
+             detection: the first window where a bottleneck verdict
+             persists).
+
+See docs/streaming.md.
+"""
+from .online import (DISPARITY, DISSIMILARITY, OnlineAnalyzer, WindowVerdict,
+                     WindowVerdictLog)
+from .spool import (MANIFEST_NAME, SPOOL_FORMAT_VERSION, SpooledTrace,
+                    TraceSpool)
+
+__all__ = ["DISPARITY", "DISSIMILARITY", "MANIFEST_NAME",
+           "OnlineAnalyzer", "SPOOL_FORMAT_VERSION", "SpooledTrace",
+           "TraceSpool", "WindowVerdict", "WindowVerdictLog"]

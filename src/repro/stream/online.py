@@ -1,0 +1,226 @@
+"""OnlineAnalyzer: windowed AutoAnalyzer verdicts while the run is going.
+
+The companion similarity-analysis work (arXiv:0906.1326) frames
+dissimilarity detection as something you can run continuously over
+collected phases.  This module does exactly that over a
+:class:`~repro.stream.spool.TraceSpool`: as tumbling step windows complete
+on disk, each one is reassembled (exact — see ``spool.py``), reduced, and
+pushed through the *full* AutoAnalyzer; the per-window verdicts accumulate
+in a :class:`WindowVerdictLog` whose **onset detector** reports the first
+window where a bottleneck verdict appears and persists for ``persist``
+consecutive windows — localizing a drifting fault (e.g.
+``ThermalThrottleDrift``) in *time*, not just in the region tree.
+
+Window ``i`` covers steps ``[i*stride, i*stride + window_steps)``
+(``stride`` defaults to ``window_steps``: tumbling, non-overlapping).  A
+window is analyzed once its last step is flushed; when the spool is marked
+complete, a trailing partial window (if any steps remain) is analyzed too,
+matching ``scripts/analyze_trace.py --per-window``.
+
+Per-window verdicts are bit-identical to an offline
+``analyze_trace.py --per-window`` replay of the finalized artifact: window
+reassembly concatenates the very float64 rows the collector recorded, and
+the analyzer configuration defaults to the ``analyzer_kw`` the producer
+put in the trace header (tests/test_stream.py pins this).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core import AutoAnalyzer, Verdict, tree_from_schema
+from repro.core.trace import RegionTrace
+
+from .spool import SpooledTrace
+
+DISSIMILARITY = "dissimilarity"
+DISPARITY = "disparity"
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowVerdict:
+    """One window's analysis outcome."""
+
+    index: int
+    start: int
+    stop: int
+    verdict: Verdict
+
+    @property
+    def kinds(self) -> frozenset:
+        """Bottleneck kinds this window's verdict asserts."""
+        out = set()
+        if self.verdict.dissimilar:
+            out.add(DISSIMILARITY)
+        if self.verdict.disparity_paths:
+            out.add(DISPARITY)
+        return frozenset(out)
+
+    def flagged(self, kind: Optional[str] = None) -> bool:
+        return bool(self.kinds) if kind is None else kind in self.kinds
+
+    def paths(self, kind: Optional[str] = None) -> Tuple[str, ...]:
+        """Located bottleneck paths — of one kind, or of both merged."""
+        out = set()
+        if kind in (None, DISSIMILARITY):
+            out |= set(self.verdict.dissimilarity_paths)
+        if kind in (None, DISPARITY):
+            out |= set(self.verdict.disparity_paths)
+        return tuple(sorted(out))
+
+
+class WindowVerdictLog:
+    """Ordered per-window verdicts + the onset detector.
+
+    Onset = the first window index ``i`` such that windows
+    ``i .. i+persist-1`` all carry a (matching-kind) bottleneck verdict —
+    one anomalous window is noise, ``persist`` consecutive ones are a
+    fault with a start time.  A monotone fault (thermal drift) therefore
+    reports the window its ramp first crossed the analyzer's threshold.
+    """
+
+    def __init__(self, persist: int = 2):
+        if persist < 1:
+            raise ValueError(f"persist must be >= 1, got {persist}")
+        self.persist = persist
+        self.windows: List[WindowVerdict] = []
+
+    def append(self, wv: WindowVerdict) -> None:
+        if wv.index != len(self.windows):
+            raise ValueError(f"window {wv.index} appended out of order "
+                             f"(expected {len(self.windows)})")
+        self.windows.append(wv)
+
+    def onset(self, kind: Optional[str] = None) -> Optional[int]:
+        """First window id beginning ``persist`` consecutive flagged
+        windows, or None if no such run has been observed (yet)."""
+        run_start, run_len = None, 0
+        for wv in self.windows:
+            if wv.flagged(kind):
+                if run_start is None:
+                    run_start, run_len = wv.index, 0
+                run_len += 1
+                if run_len >= self.persist:
+                    return run_start
+            else:
+                run_start, run_len = None, 0
+        return None
+
+    def onset_report(self, kind: Optional[str] = None
+                     ) -> Optional[Dict[str, Any]]:
+        """Machine-readable onset summary (None while nothing persisted).
+        With ``kind`` set, kinds/paths are restricted to that kind — a
+        standing benign verdict of the other kind stays out of the
+        report, just as it stays out of the detection."""
+        i = self.onset(kind)
+        if i is None:
+            return None
+        wv = self.windows[i]
+        return {
+            "onset_window": i,
+            "onset_step": wv.start,
+            "window": [wv.start, wv.stop],
+            "persist": self.persist,
+            "kinds": sorted(wv.kinds) if kind is None else [kind],
+            "paths": list(wv.paths(kind)),
+        }
+
+
+class OnlineAnalyzer:
+    """Consume a spool (or an in-memory trace) window-by-window.
+
+    The analyzer configuration resolves exactly like
+    ``scripts/analyze_trace.py``: explicit ``analyzer`` wins, else an
+    :class:`AutoAnalyzer` is built from ``tree`` (or the spool/trace
+    schema) with ``analyzer_kw`` layered over the ``analyzer_kw`` the
+    producer recorded in the header meta.
+    """
+
+    def __init__(self, tree=None, window_steps: int = 4,
+                 stride: Optional[int] = None, persist: int = 2,
+                 analyzer_kw: Optional[Dict[str, Any]] = None,
+                 analyzer: Optional[AutoAnalyzer] = None):
+        if window_steps < 1:
+            raise ValueError(f"window_steps must be >= 1, got {window_steps}")
+        self.window_steps = window_steps
+        self.stride = window_steps if stride is None else stride
+        if self.stride < 1:
+            raise ValueError(f"stride must be >= 1, got {self.stride}")
+        self.tree = tree
+        self.analyzer_kw = dict(analyzer_kw or {})
+        self._analyzer = analyzer
+        self.log = WindowVerdictLog(persist=persist)
+
+    # -- analyzer resolution ----------------------------------------------
+    def _resolve_analyzer(self, schema, meta) -> AutoAnalyzer:
+        if self._analyzer is None:
+            tree = self.tree if self.tree is not None \
+                else tree_from_schema(schema)
+            kw = dict(meta.get("analyzer_kw", {}))
+            kw.update(self.analyzer_kw)
+            self._analyzer = AutoAnalyzer(tree, **kw)
+        return self._analyzer
+
+    # -- window geometry ---------------------------------------------------
+    def _next_bounds(self) -> Tuple[int, int]:
+        i = len(self.log.windows)
+        start = i * self.stride
+        return start, start + self.window_steps
+
+    def _analyze_window(self, trace: RegionTrace,
+                        window: Tuple[int, int], start: int, stop: int,
+                        analyzer: AutoAnalyzer) -> WindowVerdict:
+        """``window`` indexes into ``trace`` (which may be rebased to step
+        0 when reassembled from a spool); ``start``/``stop`` are the
+        absolute run-step labels the log reports."""
+        res = analyzer.analyze_trace(trace, window=window)
+        wv = WindowVerdict(index=len(self.log.windows),
+                           start=start, stop=stop, verdict=res.verdict)
+        self.log.append(wv)
+        return wv
+
+    # -- consumption -------------------------------------------------------
+    def poll(self, spooled: SpooledTrace) -> List[WindowVerdict]:
+        """Analyze every window that has completed since the last poll.
+
+        Reloads the manifest first, so a live tail picks up freshly
+        flushed segments; a window is reassembled only from the segments
+        it overlaps.  When the spool is complete, the trailing partial
+        window (if any) is analyzed as the final window."""
+        spooled.reload()
+        analyzer = self._resolve_analyzer(spooled.schema, spooled.meta)
+        out: List[WindowVerdict] = []
+        while True:
+            start, stop = self._next_bounds()
+            if stop <= spooled.n_steps:
+                pass
+            elif (spooled.complete and start < spooled.n_steps):
+                stop = spooled.n_steps         # trailing partial window
+            else:
+                break
+            win = spooled.window(start, stop)
+            out.append(self._analyze_window(win, (0, win.n_steps),
+                                            start, stop, analyzer))
+        return out
+
+    def process_trace(self, trace: RegionTrace) -> WindowVerdictLog:
+        """Run every window of an already-materialized trace (a finished
+        in-memory run, or a loaded artifact) through the analyzer —
+        window-for-window identical to tailing the same run's spool."""
+        analyzer = self._resolve_analyzer(trace.schema, trace.meta)
+        while True:
+            start, stop = self._next_bounds()
+            if start >= trace.n_steps:
+                break
+            stop = min(stop, trace.n_steps)
+            self._analyze_window(trace, (start, stop), start, stop,
+                                 analyzer)
+        return self.log
+
+    # -- results -----------------------------------------------------------
+    def onset(self, kind: Optional[str] = None) -> Optional[int]:
+        return self.log.onset(kind)
+
+    def onset_report(self, kind: Optional[str] = None
+                     ) -> Optional[Dict[str, Any]]:
+        return self.log.onset_report(kind)

@@ -1,0 +1,293 @@
+"""TraceSpool: bounded-memory streaming collection of long-run traces.
+
+The paper's collection side is "lightweight in terms of the size of
+performance data to be collected"; the Trainer nevertheless used to hold
+every per-step :class:`RegionTrace` in memory until one monolithic save.
+The spool closes that gap: a :class:`TraceSpool` writer flushes completed
+step-chunks to disk as numbered *segment* files — each segment is itself a
+versioned ``RegionTrace`` artifact (same header + ``metric:<name>`` arrays
+as ``trace.py``, so ``scripts/analyze_trace.py`` runs on a single segment
+unchanged) — and a :class:`SpooledTrace` reader lazily iterates segments,
+reassembles step windows on demand, and can :meth:`~SpooledTrace.finalize`
+into the classic single-``.npz`` artifact **bitwise identical** to the
+monolithic ``RegionTrace.save`` of the same run.
+
+Peak writer memory is O(chunk): a flushed chunk leaves the process.  The
+reader is windowed: analyzing steps ``[a, b)`` loads only the segments that
+overlap, and window reassembly is exact — segments concatenate back into
+the very float64 rows the writer was handed, so
+``SpooledTrace.window(a, b).reduce()`` equals
+``whole_trace.reduce(window=(a, b))`` bit-for-bit.
+
+On-disk layout (one directory per run)::
+
+    spool-dir/
+      segment-00000.npz     RegionTrace artifact over steps [0, c0)
+      segment-00001.npz     ... steps [c0, c0+c1) ...
+      spool.json            manifest: segment index, invariants, completion
+
+The manifest is rewritten atomically (tmp + rename) after every flush, so a
+live tail (``scripts/watch_train.py``) never reads a torn index and can see
+new windows while the run is still going.  ``complete`` flips true only in
+:meth:`TraceSpool.close`, which also records the producer's *final* header
+meta — the reader applies it on reassembly, which is what makes
+``finalize()`` byte-identical to the producer's own monolithic save.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Iterator, List, Optional
+
+from repro.core.trace import RegionTrace
+
+SPOOL_FORMAT_VERSION = 1
+MANIFEST_NAME = "spool.json"
+
+
+def _write_manifest(directory: str, doc: Dict[str, Any]) -> None:
+    """Atomic rewrite: a concurrent reader sees the old or the new index,
+    never a torn file."""
+    tmp = os.path.join(directory, MANIFEST_NAME + ".tmp")
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=False)
+        f.write("\n")
+    os.replace(tmp, os.path.join(directory, MANIFEST_NAME))
+
+
+class TraceSpool:
+    """Append-only segment writer for one run's :class:`RegionTrace` stream.
+
+    ``append`` buffers per-step traces; once ``chunk_steps`` steps have
+    accumulated the buffer is merged into one segment, written to disk, and
+    dropped from memory.  Every appended trace must agree with the first on
+    regions / processes / repeats / schema / reduction meta —
+    :meth:`RegionTrace.check_mergeable`, the same invariants ``merge``
+    enforces, so segments are guaranteed to reassemble.
+
+    ``meta`` is the *provisional* final header meta, carried by the
+    manifest from the first flush so a live reader resolves run-level
+    configuration (e.g. ``analyzer_kw`` for the online analyzer) before
+    the run ends; :meth:`close` replaces it with the definitive final
+    meta (or keeps it when ``close(meta=None)``).
+    """
+
+    def __init__(self, directory: str, chunk_steps: int = 8,
+                 meta: Optional[Dict[str, Any]] = None):
+        if chunk_steps < 1:
+            raise ValueError(f"chunk_steps must be >= 1, got {chunk_steps}")
+        if os.path.exists(os.path.join(directory, MANIFEST_NAME)):
+            raise ValueError(
+                f"{directory}: already contains a spool manifest; "
+                f"spools are append-only per run — use a fresh directory")
+        os.makedirs(directory, exist_ok=True)
+        self.directory = directory
+        self.chunk_steps = chunk_steps
+        self._meta = dict(meta) if meta is not None else None
+        self._pending: List[RegionTrace] = []
+        self._pending_steps = 0
+        self._segments: List[Dict[str, Any]] = []
+        self._n_steps = 0
+        self._head: Optional[RegionTrace] = None
+        self._closed = False
+
+    # -- writer state ------------------------------------------------------
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    @property
+    def n_steps(self) -> int:
+        """Steps appended so far (flushed + buffered)."""
+        return self._n_steps + self._pending_steps
+
+    @property
+    def head_meta(self) -> Dict[str, Any]:
+        """Meta of the first appended trace (the stream's base header)."""
+        if self._head is None:
+            raise ValueError("empty spool has no head")
+        return dict(self._head.meta)
+
+    def append(self, step_trace: RegionTrace) -> None:
+        if self._closed:
+            raise ValueError("spool is closed")
+        if self._head is None:
+            self._head = step_trace
+        else:
+            # fail at the offending append, not at a later flush/merge
+            RegionTrace.check_mergeable(self._head, step_trace)
+        self._pending.append(step_trace)
+        self._pending_steps += step_trace.n_steps
+        if self._pending_steps >= self.chunk_steps:
+            self._flush()
+
+    def _flush(self) -> None:
+        if not self._pending:
+            return
+        seg = (self._pending[0] if len(self._pending) == 1
+               else RegionTrace.merge(self._pending))
+        idx = len(self._segments)
+        fname = f"segment-{idx:05d}.npz"
+        seg.save(os.path.join(self.directory, fname))
+        self._segments.append(
+            {"file": fname, "start": self._n_steps, "n_steps": seg.n_steps})
+        self._n_steps += seg.n_steps
+        self._pending = []
+        self._pending_steps = 0
+        self._write_manifest(complete=False, meta=self._meta)
+
+    def _write_manifest(self, complete: bool,
+                        meta: Optional[Dict[str, Any]]) -> None:
+        h = self._head
+        doc = {
+            "format": "repro.trace_spool",
+            "version": SPOOL_FORMAT_VERSION,
+            "chunk_steps": self.chunk_steps,
+            "region_ids": list(h.region_ids) if h else [],
+            "n_processes": h.n_processes if h else 0,
+            "n_repeats": h.n_repeats if h else 1,
+            "schema": list(h.schema) if h else [],
+            "base_meta": dict(h.meta) if h else {},
+            "n_steps": self._n_steps,
+            "segments": self._segments,
+            "complete": complete,
+            # Header meta the producer wants the reassembled artifact to
+            # carry (provisional while live, definitive after close;
+            # None = keep the stream's base meta).  Applied by
+            # SpooledTrace.
+            "meta": meta,
+        }
+        _write_manifest(self.directory, doc)
+
+    def close(self, meta: Optional[Dict[str, Any]] = None) -> str:
+        """Flush the tail chunk and mark the spool complete.
+
+        ``meta`` is the definitive final header meta for the reassembled
+        artifact (e.g. the Trainer's ``collector``/``analyzer_kw``/
+        ``straggler_events``); ``meta=None`` keeps the provisional meta
+        from construction, or — when neither was given — the stream's
+        base meta.  Returns the manifest path."""
+        if self._closed:
+            raise ValueError("spool already closed")
+        self._flush()
+        if meta is not None:
+            self._meta = dict(meta)
+        self._write_manifest(complete=True, meta=self._meta)
+        self._closed = True
+        return os.path.join(self.directory, MANIFEST_NAME)
+
+
+class SpooledTrace:
+    """Lazy reader over a spool directory (live or finished run).
+
+    Loads at most the segments a request touches; :meth:`reload` refreshes
+    the manifest so a tail sees newly flushed segments.  ``to_trace`` /
+    ``finalize`` reassemble the whole run — an O(n_steps) materialization
+    by construction, meant for end-of-run conversion; bounded-memory
+    consumers use :meth:`window` / :class:`repro.stream.OnlineAnalyzer`.
+    """
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        self.reload()
+
+    def reload(self) -> "SpooledTrace":
+        path = os.path.join(self.directory, MANIFEST_NAME)
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except FileNotFoundError:
+            raise ValueError(f"{self.directory}: no spool manifest "
+                             f"({MANIFEST_NAME}) — not a spool, or nothing "
+                             f"flushed yet")
+        if doc.get("format") != "repro.trace_spool":
+            raise ValueError(f"{path}: not a trace-spool manifest")
+        if doc["version"] > SPOOL_FORMAT_VERSION:
+            raise ValueError(f"{path}: spool version {doc['version']} is "
+                             f"newer than supported {SPOOL_FORMAT_VERSION}")
+        self._doc = doc
+        return self
+
+    # -- manifest views ----------------------------------------------------
+    @property
+    def n_steps(self) -> int:
+        """Steps flushed to disk so far (== total once ``complete``)."""
+        return self._doc["n_steps"]
+
+    @property
+    def complete(self) -> bool:
+        return self._doc["complete"]
+
+    @property
+    def schema(self) -> List[Dict[str, Any]]:
+        return self._doc["schema"]
+
+    @property
+    def meta(self) -> Dict[str, Any]:
+        """Final meta when closed with one, else the stream's base meta."""
+        return dict(self._doc["meta"] or self._doc["base_meta"])
+
+    @property
+    def n_segments(self) -> int:
+        return len(self._doc["segments"])
+
+    def segment(self, index: int) -> RegionTrace:
+        seg = self._doc["segments"][index]
+        return RegionTrace.load(os.path.join(self.directory, seg["file"]))
+
+    def segments(self) -> Iterator[RegionTrace]:
+        """Lazily yield segment traces in step order, one in memory at a
+        time."""
+        for i in range(self.n_segments):
+            yield self.segment(i)
+
+    # -- reassembly --------------------------------------------------------
+    def _covering(self, start: int, stop: int) -> List[int]:
+        out = []
+        for i, seg in enumerate(self._doc["segments"]):
+            s0, s1 = seg["start"], seg["start"] + seg["n_steps"]
+            if s0 < stop and s1 > start:
+                out.append(i)
+        return out
+
+    def window(self, start: int, stop: Optional[int] = None) -> RegionTrace:
+        """Reassemble steps ``[start, stop)`` from the overlapping segments
+        — exact: the merged rows are the very float64 samples the writer
+        flushed, so reducing this window is bit-identical to reducing the
+        same window of the monolithic trace."""
+        stop = self.n_steps if stop is None else stop
+        if not (0 <= start < stop <= self.n_steps):
+            raise ValueError(f"bad window [{start}, {stop}) for "
+                             f"{self.n_steps} flushed steps")
+        idxs = self._covering(start, stop)
+        traces = [self.segment(i) for i in idxs]
+        merged = traces[0] if len(traces) == 1 else RegionTrace.merge(traces)
+        base = self._doc["segments"][idxs[0]]["start"]
+        return merged.window(start - base, stop - base)
+
+    def to_trace(self) -> RegionTrace:
+        """Reassemble the whole run, applying the producer's final meta.
+
+        O(n_steps) memory — an explicit materialization for conversion and
+        whole-run analysis, not the streaming path."""
+        if not self._doc["segments"]:
+            raise ValueError(f"{self.directory}: empty spool")
+        traces = list(self.segments())
+        merged = traces[0] if len(traces) == 1 else RegionTrace.merge(traces)
+        if self._doc["meta"] is not None:
+            merged.meta = dict(self._doc["meta"])
+        return merged
+
+    def finalize(self, path: str) -> str:
+        """Convert to the classic single-``.npz`` artifact.
+
+        Byte-identical to ``RegionTrace.save`` of the producer's own merged
+        trace: merge is value-exact concatenation, float64 round-trips
+        bit-exactly through segment files, the final meta is replayed from
+        the manifest in producer key order, and ``np.savez_compressed``
+        writes deterministically (fixed zip timestamps) — pinned by
+        tests/test_stream.py for the synthetic and train backends."""
+        if not self.complete:
+            raise ValueError(f"{self.directory}: spool is not complete; "
+                             f"finalize only a closed run")
+        return self.to_trace().save(path)

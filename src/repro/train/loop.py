@@ -14,6 +14,14 @@ of truth: :class:`StragglerMonitor` observations are derived from its
 per-shard samples (not a private ``perf_counter`` path), ``run`` emits a
 portable ``.npz`` artifact, and ``scripts/analyze_trace.py`` replays the
 full analysis offline (the paper's collection/analysis split).
+
+Long runs stream instead of accumulating: ``trace_spool_dir`` routes the
+per-step traces through a :class:`repro.stream.TraceSpool` (peak
+collection memory O(chunk), live-tailable by ``scripts/watch_train.py``,
+finalized byte-identically to the monolithic save — docs/streaming.md).
+On MoE configs ``trace_expert_iters`` adds per-expert probe regions to
+the instrumented tree, so routing imbalance is genuinely executed
+per-region work the analyzer can localize.
 """
 from __future__ import annotations
 
@@ -54,8 +62,40 @@ def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig) -> Callable:
     return train_step
 
 
+def _expert_probe_leaf(cfg: ModelConfig, expert: int):
+    """A per-expert instrumented region: run expert ``expert``'s gated FFN
+    (layer 0 weights from the live params) on the shard's probe-token
+    tile, ``bundle["expert_iters"][expert]`` times — so a hot expert
+    genuinely executes more jitted work, per shard, inside its own region.
+    The per-iteration roll by the loop index plus the carried accumulator
+    keep XLA's loop-invariant code motion from collapsing N iterations
+    into one (same defence as the iterated fwd_bwd)."""
+    import jax.numpy as jnp
+
+    from repro.models.layers import _act
+
+    def leaf(state, bundle):
+        iters = bundle["expert_iters"][expert]
+        toks = bundle["probe_tokens"]                       # (T, d_model)
+        moe_p = state["params"]["layers"]["moe"]            # (L, E, ...)
+        wi = moe_p["wi"][0, expert]
+        wg = moe_p["wg"][0, expert]
+        wo = moe_p["wo"][0, expert]
+
+        def body(i, acc):
+            x = jnp.roll(toks, i, axis=0)
+            h = _act(x @ wg, cfg.activation) * (x @ wi)
+            return acc + (h @ wo).sum()
+
+        probe = jax.lax.fori_loop(0, iters, body, state["probe"])
+        return {**state, "probe": probe}
+
+    return leaf
+
+
 def train_region_tree(cfg: ModelConfig, opt_cfg: AdamWConfig,
-                      iterated: bool = False) -> RegionTree:
+                      iterated: bool = False,
+                      expert_probe: bool = False) -> RegionTree:
     """The real training step as a code-region tree (paper §2 applied to
     the train loop): ``train/{fwd_bwd, optimizer}`` leaves threading a
     stable ``{params, opt_state, grads, loss}`` state pytree, runnable by
@@ -65,7 +105,14 @@ def train_region_tree(cfg: ModelConfig, opt_cfg: AdamWConfig,
     :func:`repro.scenarios.faults.iterated_work`, so shard data arrives
     as ``(batch, iters)`` bundles and a shard carrying a larger ``iters``
     genuinely executes more jitted work — the corpus fault-injection
-    hook on real model steps."""
+    hook on real model steps.
+
+    With ``expert_probe=True`` (MoE configs only) the tree grows a
+    ``moe/expert_<e>`` leaf per routed expert, each running that expert's
+    FFN on a probe-token tile ``expert_iters[e]`` times — per-expert load
+    becomes per-region instrumented work, so the analyzer can pin a hot
+    expert in the region tree.  Shard data then arrives as a dict bundle
+    ``{batch, iters, expert_iters, probe_tokens}``."""
     api = build(cfg)
 
     def fwd_bwd(state, batch):
@@ -86,6 +133,8 @@ def train_region_tree(cfg: ModelConfig, opt_cfg: AdamWConfig,
                 "grads": jax.tree.map(jnp.zeros_like, state["grads"])}
 
     tree = RegionTree("train")
+    if expert_probe and cfg.moe is None:
+        raise ValueError(f"{cfg.name}: expert_probe needs an MoE config")
     if iterated:
         # Lazy import: scenarios.corpus imports repro.train for the train
         # backend, so the reverse edge must not exist at module scope.
@@ -100,7 +149,28 @@ def train_region_tree(cfg: ModelConfig, opt_cfg: AdamWConfig,
             rolled = {k: jnp.roll(v, i, axis=0) for k, v in batch.items()}
             return fwd_bwd(state, rolled)
 
-        tree.add("fwd_bwd", fn=iterated_work(fwd_bwd_micro, indexed=True))
+        fwd_bwd_iter = iterated_work(fwd_bwd_micro, indexed=True)
+
+    if expert_probe:
+        # Dict bundles: every region unpacks the piece it consumes.
+        if iterated:
+            def fwd_bwd_leaf(state, bundle):
+                return fwd_bwd_iter(state, (bundle["batch"],
+                                            bundle["iters"]))
+        else:
+            def fwd_bwd_leaf(state, bundle):
+                return fwd_bwd(state, bundle["batch"])
+        tree.add("fwd_bwd", fn=fwd_bwd_leaf)
+        moe_parent = tree.add("moe")
+        for e in range(cfg.moe.n_experts):
+            tree.add(f"expert_{e}", parent=moe_parent,
+                     fn=_expert_probe_leaf(cfg, e))
+
+        def optimizer_leaf(state, bundle):
+            return optimizer(state, bundle["batch"])
+        tree.add("optimizer", fn=optimizer_leaf)
+    elif iterated:
+        tree.add("fwd_bwd", fn=fwd_bwd_iter)
 
         def optimizer_b(state, bundle):
             batch, _ = bundle
@@ -140,15 +210,35 @@ class TrainerConfig:
     # with more iterations genuinely executes more jitted work).
     trace_iters: Optional[Tuple[int, ...]] = None
     trace_meta: Optional[Dict[str, Any]] = None  # merged into the header
+    # -- streaming collection (docs/streaming.md) -------------------------
+    # With a spool directory set, per-step traces stream to disk as
+    # segment files instead of accumulating in memory: peak collection
+    # memory is O(trace_chunk_steps), and a live OnlineAnalyzer /
+    # watch_train.py can tail the run.  trace_path still works — the
+    # closed spool finalizes into the same (byte-identical) artifact.
+    trace_spool_dir: Optional[str] = None
+    trace_chunk_steps: int = 8
+    # -- MoE expert probe (expert regions in the instrumented tree) -------
+    # Per-shard per-expert probe iteration counts ((n_shards, n_experts)):
+    # each expert_<e> region runs its FFN expert_iters[shard][e] times, so
+    # routing imbalance becomes genuinely executed per-region work.
+    trace_expert_iters: Optional[Tuple[Tuple[int, ...], ...]] = None
+    trace_probe_tokens: int = 64   # probe tile rows per expert iteration
 
     def __post_init__(self) -> None:
-        if self.trace_path or self.trace_iters:
+        if self.trace_path or self.trace_iters or self.trace_spool_dir \
+                or self.trace_expert_iters:
             self.trace = True
         if self.trace_iters is not None and \
                 len(self.trace_iters) != self.trace_shards:
             raise ValueError(
                 f"trace_iters has {len(self.trace_iters)} entries for "
                 f"{self.trace_shards} shards")
+        if self.trace_expert_iters is not None and \
+                len(self.trace_expert_iters) != self.trace_shards:
+            raise ValueError(
+                f"trace_expert_iters has {len(self.trace_expert_iters)} "
+                f"entries for {self.trace_shards} shards")
 
 
 class StragglerMonitor:
@@ -203,10 +293,31 @@ class Trainer:
         self.step = 0
         self.trace: Optional[RegionTrace] = None
         self._step_traces: List[RegionTrace] = []
+        self.spool = None
+        if self.tcfg.trace_spool_dir:
+            # Lazy import: repro.stream sits above the core trace layer.
+            # trace_meta rides along provisionally so a live tail resolves
+            # run-level configuration (analyzer_kw) before the run ends;
+            # close() replaces it with the definitive final meta.
+            from repro.stream import TraceSpool
+            self.spool = TraceSpool(self.tcfg.trace_spool_dir,
+                                    chunk_steps=self.tcfg.trace_chunk_steps,
+                                    meta=self.tcfg.trace_meta)
         if self.tcfg.trace:
+            if self.tcfg.trace_expert_iters is not None and self.cfg.moe:
+                # shard count is checked in TrainerConfig; the expert
+                # count needs the model config, so it is checked here
+                # (train_region_tree rejects the non-MoE case itself)
+                want = self.cfg.moe.n_experts
+                for i, row in enumerate(self.tcfg.trace_expert_iters):
+                    if len(row) != want:
+                        raise ValueError(
+                            f"trace_expert_iters[{i}] has {len(row)} "
+                            f"entries for {want} experts")
             self.region_tree = train_region_tree(
                 self.cfg, self.opt_cfg,
-                iterated=self.tcfg.trace_iters is not None)
+                iterated=self.tcfg.trace_iters is not None,
+                expert_probe=self.tcfg.trace_expert_iters is not None)
             # warmup=1: the first jitted call pays trace+compile (the
             # explicit lower().compile() does not seed jit's dispatch
             # cache), which would otherwise be recorded as shard 0's
@@ -220,10 +331,21 @@ class Trainer:
             # of the same initial state on its slice of the global batch —
             # the single-host stand-in for per-rank SPMD execution that
             # TimedRegionRunner already uses.
-            self._shard_states = [
-                {"params": self.params, "opt_state": self.opt_state,
-                 "grads": zero_grads, "loss": jnp.float32(0.0)}
-                for _ in range(self.tcfg.trace_shards)]
+            state = {"params": self.params, "opt_state": self.opt_state,
+                     "grads": zero_grads, "loss": jnp.float32(0.0)}
+            if self.tcfg.trace_expert_iters is not None:
+                state["probe"] = jnp.float32(0.0)
+                # Per-shard probe-token tiles, deterministic and constant
+                # across steps (the per-iteration roll varies the work) —
+                # built once, reused by every _traced_step.
+                self._probe_tokens = [
+                    jax.random.normal(
+                        jax.random.key(self.tcfg.seed * 977 + i),
+                        (self.tcfg.trace_probe_tokens, self.cfg.d_model),
+                        dtype=jnp.float32)
+                    for i in range(self.tcfg.trace_shards)]
+            self._shard_states = [dict(state)
+                                  for _ in range(self.tcfg.trace_shards)]
 
     def _traced_step(self, step: int) -> Dict[str, Any]:
         """One region-instrumented step over all emulated shards; appends
@@ -233,13 +355,26 @@ class Trainer:
         for i in range(m):
             b = host_batch(self.data_cfg, step, n_shards=m, shard=i)
             batch = {k: jnp.asarray(v) for k, v in b.items()}
-            if self.tcfg.trace_iters is not None:
+            if self.tcfg.trace_expert_iters is not None:
+                # iters defaults to 1 when the entry injects only through
+                # the expert probe.
+                iters = (self.tcfg.trace_iters[i]
+                         if self.tcfg.trace_iters is not None else 1)
+                data.append({
+                    "batch": batch, "iters": jnp.int32(iters),
+                    "expert_iters": jnp.asarray(
+                        self.tcfg.trace_expert_iters[i], dtype=jnp.int32),
+                    "probe_tokens": self._probe_tokens[i]})
+            elif self.tcfg.trace_iters is not None:
                 data.append((batch, jnp.int32(self.tcfg.trace_iters[i])))
             else:
                 data.append(batch)
         step_trace = self.runner.run_trace(self._shard_states, data)
         self._shard_states = self.runner.final_states
-        self._step_traces.append(step_trace)
+        if self.spool is not None:
+            self.spool.append(step_trace)
+        else:
+            self._step_traces.append(step_trace)
         rm = step_trace.reduce()
         per_shard = rm.metric(WALL_TIME).sum(axis=1)   # (m,) step seconds
         # SPMD semantics: the step ends when the slowest shard does.
@@ -253,15 +388,43 @@ class Trainer:
                 "seconds": seconds,
                 "per_shard_seconds": [float(x) for x in per_shard]}
 
+    def _final_meta(self, base: Dict[str, Any]) -> Dict[str, Any]:
+        """The merged artifact's header meta, built the same way (and in
+        the same key order) for the in-memory and spooled paths — key
+        order matters because spool finalization must reproduce the
+        monolithic save byte-for-byte."""
+        meta = dict(base)
+        meta["collector"] = "train"
+        meta.update(self.tcfg.trace_meta or {})
+        meta["straggler_events"] = len(self.monitor.events)
+        return meta
+
     def finalize_trace(self) -> Optional[RegionTrace]:
         """Merge the per-step traces into one artifact (saved to
-        ``trace_path`` when set) and expose it as ``self.trace``."""
+        ``trace_path`` when set) and expose it as ``self.trace``.
+
+        In spool mode the per-step traces already live on disk: the spool
+        is closed with the final header meta, and the merged trace is
+        reassembled from the segments — ``trace_path`` then receives the
+        spool's ``finalize()`` output, byte-identical to what the
+        in-memory path would have saved."""
+        if self.spool is not None:
+            if self.spool.n_steps == 0:
+                return None
+            from repro.stream import SpooledTrace
+            if not self.spool.closed:
+                self.spool.close(
+                    meta=self._final_meta(self.spool.head_meta))
+            self.trace = SpooledTrace(self.spool.directory).to_trace()
+            if self.tcfg.trace_path:
+                # == SpooledTrace.finalize(trace_path): to_trace() is the
+                # finalize reassembly, saved once instead of twice.
+                self.trace.save(self.tcfg.trace_path)
+            return self.trace
         if not self._step_traces:
             return None
         self.trace = RegionTrace.merge(self._step_traces)
-        self.trace.meta["collector"] = "train"
-        self.trace.meta.update(self.tcfg.trace_meta or {})
-        self.trace.meta["straggler_events"] = len(self.monitor.events)
+        self.trace.meta = self._final_meta(self.trace.meta)
         if self.tcfg.trace_path:
             self.trace.save(self.tcfg.trace_path)
         return self.trace
