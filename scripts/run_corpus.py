@@ -7,6 +7,13 @@
 Prints a per-entry precision/recall table and exits nonzero when any entry
 misses its ground-truth bottleneck paths or cause attributes — usable
 directly as a CI gate.
+
+Recovery-backend entries (``--backend recovery``) run the closed
+mitigation loop end-to-end (docs/mitigation.md): live per-step verdicts
+drive a MitigationPolicy, and the ``recov`` column reports the window the
+action fired at against the entry's time-to-mitigate bound (got/want,
+like ``onset``); the detail line below adds the action kind and the
+post-mitigation clean-window tail.
 """
 from __future__ import annotations
 
@@ -18,7 +25,8 @@ import sys
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--backend", choices=("synthetic", "runtime", "train"),
+    ap.add_argument("--backend",
+                    choices=("synthetic", "runtime", "train", "recovery"),
                     default=None, help="restrict to one backend")
     ap.add_argument("--entry", action="append", default=None,
                     help="run only these entries (repeatable)")
@@ -71,8 +79,9 @@ def main(argv=None) -> int:
         return 2
     wname = max(len(r.entry.name) for r, _ in results) + 2
     print(f"{'entry':{wname}s} {'kind':13s} {'prec':>6s} {'recall':>6s} "
-          f"{'causes':>6s} {'onset':>7s} {'wall_s':>7s}  status")
-    print("-" * (wname + 60))
+          f"{'causes':>6s} {'onset':>7s} {'recov':>7s} {'wall_s':>7s}  "
+          f"status")
+    print("-" * (wname + 68))
     failures = 0
     for r, walls in results:
         status = "ok" if r.passed else "FAIL"
@@ -80,9 +89,20 @@ def main(argv=None) -> int:
             failures += 1
         want = r.entry.expect_onset_window
         onset = "-" if want is None else f"{r.onset_window}/{want}"
+        # recovery got/want: the window the first action fired at vs the
+        # entry's time-to-mitigate bound (details printed below)
+        rwant = r.entry.recovery
+        recov = "-" if rwant is None \
+            else f"{r.mitigation_window}/{rwant.mitigate_by_window}"
         print(f"{r.entry.name:{wname}s} {r.entry.truth.kind:13s} "
               f"{r.precision:6.2f} {r.recall:6.2f} {r.cause_recall:6.2f} "
-              f"{onset:>7s} {sum(walls):7.3f}  {status}")
+              f"{onset:>7s} {recov:>7s} {sum(walls):7.3f}  {status}")
+        if rwant is not None:
+            print(f"{'':{wname}s}   recovery: got {r.recovery_kind} at "
+                  f"window {r.mitigation_window}, clean tail "
+                  f"{r.clean_after} (want {rwant.kind} by window "
+                  f"{rwant.mitigate_by_window}, clean >= "
+                  f"{rwant.clean_windows})")
         if len(walls) > 1:
             # a retried wall-clock entry: report every attempt, not just
             # the one whose result was kept
@@ -97,7 +117,7 @@ def main(argv=None) -> int:
             print(f"{'':{wname}s}   causes wanted {sorted(want)}, "
                   f"got {sorted(r.causes_found)} at the planted paths "
                   f"(globally: {sorted(r.verdict.cause_attributes)})")
-    print("-" * (wname + 60))
+    print("-" * (wname + 68))
     print(f"{len(results) - failures}/{len(results)} entries passed "
           f"(seed {args.seed})")
     return 1 if failures else 0

@@ -12,7 +12,10 @@ the run goes; this script re-reads the spool manifest, runs the full
 AutoAnalyzer on each completed tumbling window, prints one verdict line
 per window, and reports the **onset**: the first window whose bottleneck
 verdict persisted ``--persist`` consecutive windows — so a drifting fault
-is localized in time while the run is still going.
+is localized in time while the run is still going.  With overlapping
+windows (``--stride`` smaller than ``--window``) the reported onset step
+is additionally bisected *inside* the first flagged window, down to the
+exact step whose inclusion first flips the verdict.
 
 Analyzer keyword arguments default to the ``analyzer_kw`` the collector
 recorded in the trace header (same resolution as ``analyze_trace.py``)
@@ -46,7 +49,9 @@ def main(argv=None) -> int:
     ap.add_argument("--window", type=int, default=4, metavar="N",
                     help="tumbling window size in steps (default 4)")
     ap.add_argument("--stride", type=int, default=None, metavar="N",
-                    help="window stride (default: window size)")
+                    help="window stride (default: window size; a stride "
+                         "smaller than the window overlaps windows and "
+                         "bisects the onset down to a step)")
     ap.add_argument("--persist", type=int, default=2, metavar="K",
                     help="consecutive flagged windows that define onset")
     ap.add_argument("--kind", choices=("dissimilarity", "disparity"),

@@ -14,8 +14,8 @@ from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .clustering import (HIGH, MEDIUM, ClusterResult, kmeans_severity,
-                         optics_cluster)
+from .clustering import (HIGH, MEDIUM, SEVERITY_SPAN_DECADES,
+                         ClusterResult, kmeans_severity, optics_cluster)
 from .metrics import (COMM_BYTES, CPU_TIME, DECISION_ATTRIBUTES, FLOPS,
                       HBM_INTENSITY, HOST_BYTES, VMEM_PRESSURE, WALL_TIME,
                       RegionMetrics)
@@ -241,7 +241,8 @@ class AutoAnalyzer:
     def _disparity_pass(self, rm: RegionMetrics,
                         rids: List[int]) -> DisparityReport:
         vals = self._disparity_values(rm, rids)
-        return find_disparity_bottlenecks(self.tree, vals, rids)
+        return find_disparity_bottlenecks(self.tree, vals, rids,
+                                          wall=rm.wall_all(rids))
 
     # -- decision tables ---------------------------------------------------
     def _dissimilarity_table(self, rm: RegionMetrics,
@@ -270,11 +271,21 @@ class AutoAnalyzer:
                          disp: DisparityReport) -> DecisionTable:
         """Fig. 5: per-region rows; attribute = 1 iff the k-means severity
         of the region's average metric value is higher than medium;
-        decision = 1 iff the region is a disparity bottleneck."""
+        decision = 1 iff the region is a disparity bottleneck.  Attribute
+        banding gets the severity-range floor: a near-flat metric column
+        (all regions within ~2x) lights nobody's bit, where the unfloored
+        relative banding always crowned the column maximum.  Columns
+        genuinely stretched past the floor band exactly as before, so the
+        paper's Table 4 / §6 cause tables are unchanged.  No
+        exclusive-share discount here: rows are cause *candidates*,
+        location-gated by the per-CCR reduct search, and an enclosing
+        region's causes legitimately include its children's (paper
+        Table 4 lists region 14's L2 pressure, which lives in 11)."""
         rows_by_attr = []
         for a in self.attributes:
             avg = np.array([rm.region_mean(a, r) for r in rids])
-            sev = kmeans_severity(avg)
+            sev = kmeans_severity(avg,
+                                  floor_decades=SEVERITY_SPAN_DECADES)
             rows_by_attr.append([1 if s > MEDIUM else 0 for s in sev])
         rows = [tuple(rows_by_attr[k][j] for k in range(len(self.attributes)))
                 for j in range(len(rids))]

@@ -657,18 +657,58 @@ def kmeans_1d(values: np.ndarray, k: int, n_iter: int = 100,
     return rank[lab]
 
 
-def kmeans_severity(values: Sequence[float], k: int = 5,
-                    log_space: bool = True) -> np.ndarray:
+# Minimum full-scale stretch of the severity axis, in log10 decades.
+# Relative-position banding always puts *some* value at the top of the
+# observed range, so a near-flat profile (all regions within a few 10s of
+# percent) still produced 'very high' labels.  Flooring the banding range
+# at this many decades compresses mildly spread profiles toward 'very
+# low' instead: with rounding, the HIGH threshold then sits at
+# 0.625 * 0.65 = 0.406 decades (~2.5x) above the minimum — centred in
+# the corpus-measured gap between every planted disparity (>= +0.486
+# decades across seeds {0,1,2,3,7,11}) and every known-benign region
+# (<= +0.330, once the exclusive-share discount removes inclusive
+# parents from the top of the range).  Profiles already stretched past
+# 0.65 decades (all the paper's §6 scenarios) band exactly as before.
+SEVERITY_SPAN_DECADES = 0.65
+
+
+def severity_scale(values, k: int = 5,
+                   floor_decades: Optional[float] = None
+                   ) -> Tuple[float, float]:
+    """The (lo, range) of the log10 banding axis :func:`kmeans_severity`
+    maps onto the five labels: label = round((k-1) * (log10 v - lo) / rng).
+    Exposed so callers can place *derived* values (e.g. a parent region's
+    exclusive-share-discounted metric) on the same scale the raw values
+    were banded with."""
+    x = np.asarray(list(values), dtype=np.float64)
+    top = x.max() if x.size else 0.0
+    if top <= 0:
+        return 0.0, floor_decades or 1.0
+    x = np.log10(np.maximum(x, top * 1e-4))
+    rng = x.max() - x.min()
+    if floor_decades is not None:
+        rng = max(rng, floor_decades)
+    return float(x.min()), float(rng)
+
+
+def kmeans_severity(values, k: int = 5, log_space: bool = True,
+                    floor_decades: Optional[float] = None) -> np.ndarray:
     """Classify per-region scalar metrics into the five severity categories
     (paper §4.2.2): very low(0), low(1), medium(2), high(3), very high(4).
 
     Implementation notes vs the paper's raw k-means (recorded in DESIGN.md):
     performance metrics span orders of magnitude and contain near-duplicate
-    noise, so (1) clustering runs in log space, (2) clusters whose centroids
-    differ by <3% of the data range are merged (noise robustness), and
-    (3) each cluster's severity label is its centroid's relative position in
-    the log range — so 'very high' always means 'close to the maximum', even
-    when fewer than 5 natural clusters exist."""
+    noise, so (1) clustering runs in log space and (2) clusters whose
+    centroids differ by <3% of the data range are merged (noise
+    robustness).
+
+    The label is the merged centroid's relative position in the observed
+    log range.  With ``floor_decades`` (see
+    :data:`SEVERITY_SPAN_DECADES`) the range is floored at that many
+    decades before positions are taken, so a mildly spread profile bands
+    everything low instead of crowning its maximum 'very high'; a profile
+    genuinely stretched past the floor bands identically to the unfloored
+    (legacy) behaviour."""
     x = np.asarray(list(values), dtype=np.float64)
     if x.size == 0:
         return np.zeros(0, dtype=np.int64)
@@ -691,7 +731,8 @@ def kmeans_severity(values: Sequence[float], k: int = 5,
             merged[-1].append(c)
         else:
             merged.append([c])
-    # severity by relative magnitude of the merged centroid
+    if floor_decades is not None:
+        rng = max(rng, floor_decades)
     sev_of_cluster = {}
     lo = x.min()
     for group in merged:

@@ -23,10 +23,11 @@ from typing import (Callable, Dict, FrozenSet, List, Optional,
 
 import numpy as np
 
-from .clustering import (HIGH, SEVERITY_NAMES, ClusterResult,
-                         DistanceBackendSpec, IncrementalClusterState,
-                         _expand_column_values, dissimilarity_severity,
-                         kmeans_severity, optics_cluster)
+from .clustering import (HIGH, SEVERITY_NAMES, SEVERITY_SPAN_DECADES,
+                         ClusterResult, DistanceBackendSpec,
+                         IncrementalClusterState, _expand_column_values,
+                         dissimilarity_severity, kmeans_severity,
+                         optics_cluster, severity_scale)
 from .regions import CodeRegion, RegionTree
 
 
@@ -262,11 +263,110 @@ def find_dissimilarity_bottlenecks(
                                sorted(set(cccrs)), severity, s)
 
 
+def time_share_weighting(tree: RegionTree, wall: np.ndarray,
+                         region_ids: Sequence[int]
+                         ) -> tuple[np.ndarray, np.ndarray]:
+    """Exclusive-time-share discount for the severity banding.
+
+    Region timing is *inclusive*: a parent's wall time (and hence any
+    time-flavoured metric) contains its children's, so a large enclosing
+    region always sits near the top of the per-region value range even
+    when every anomaly lives in a child.  This helper computes, per
+    region, the share of its own wall time not accounted for by measured
+    children:
+
+        ratio_j = max(wall_j - sum(wall_children present), 0) / wall_j
+
+    (1.0 for leaves and for regions without measured children).  Returns
+    ``(ratios, weights)`` where ``weights`` are the exclusive wall times
+    normalized to sum 1 (each region's share of the run's self time).
+    Banding ``values * ratios`` flags a parent only for work it does
+    *itself*; anomalies in children are flagged on the children, where
+    the search can actually localize them.
+    """
+    wall = np.asarray(wall, dtype=np.float64)
+    idx = {rid: j for j, rid in enumerate(region_ids)}
+    excl = wall.copy()
+    for rid, j in idx.items():
+        try:
+            region = tree[rid]
+        except KeyError:
+            continue
+        child_wall = sum(wall[idx[c.region_id]] for c in region.children
+                         if c.region_id in idx)
+        excl[j] = max(wall[j] - child_wall, 0.0)
+    ratios = np.where(wall > 0, excl / np.maximum(wall, 1e-30), 1.0)
+    total = excl.sum()
+    weights = (excl / total if total > 0
+               else np.full(len(wall), 1.0 / max(len(wall), 1)))
+    return ratios, weights
+
+
+def time_share_severity(tree: RegionTree, values: np.ndarray,
+                        region_ids: Sequence[int], wall: np.ndarray,
+                        k: int = 5,
+                        floor_decades: float = SEVERITY_SPAN_DECADES
+                        ) -> np.ndarray:
+    """Time-share-weighted severity banding (ROADMAP carry-over study).
+
+    Three corrections over banding raw inclusive values:
+
+    1. **Range floor** — the banding range is floored at
+       ``floor_decades`` so a mildly spread profile produces no high
+       bands (see :data:`SEVERITY_SPAN_DECADES`).
+    2. **Exclusive-share discount** — a region containing measured
+       children is re-banded at the position of ``value * ratio`` (its
+       metric scaled to the share of wall time it owns exclusively) on
+       the *same* scale the raw values were banded with, so an enclosing
+       region is banded only on work it does itself.
+    3. **Child-max inheritance** — severity then propagates back up:
+       a parent is at least as severe as its hottest measured child
+       (timing is inclusive, so a disparity in the child *is* in the
+       parent; the CCR->CCCR rule already prefers the child on ties,
+       which keeps the paper's ST result: 11 and 14 both very-high,
+       11 is the CCCR).
+
+    Leaves band exactly as the legacy relative-position rule whenever
+    the profile stretches past the floor — every §6 paper scenario is
+    unchanged — while an inclusive parent over a clean or mildly
+    stretched tree no longer produces a spurious bottleneck.
+    """
+    values = np.asarray(values, dtype=np.float64)
+    sev = kmeans_severity(values, k=k, floor_decades=floor_decades)
+    ratios, _ = time_share_weighting(tree, wall, region_ids)
+    inner = np.nonzero(ratios < 1.0)[0]
+    top = values.max() if values.size else 0.0
+    if inner.size and top > 0:
+        lo, rng = severity_scale(values, k=k, floor_decades=floor_decades)
+        for j in inner:
+            u = np.log10(max(values[j] * ratios[j], top * 1e-4))
+            s = int(np.clip(np.round((k - 1) * (u - lo) / rng), 0, k - 1))
+            sev[j] = min(int(sev[j]), s)
+    # inheritance, deepest regions first so chains propagate to the root
+    idx = {rid: j for j, rid in enumerate(region_ids)}
+
+    def depth(rid):
+        d, node = 0, tree[rid]
+        while node.parent is not None:
+            d, node = d + 1, node.parent
+        return d
+
+    known = [rid for rid in region_ids if rid in {r.region_id
+                                                  for r in tree.regions()}]
+    for rid in sorted(known, key=depth, reverse=True):
+        parent = tree[rid].parent
+        if parent is not None and parent.region_id in idx:
+            pj = idx[parent.region_id]
+            sev[pj] = max(int(sev[pj]), int(sev[idx[rid]]))
+    return sev
+
+
 def find_disparity_bottlenecks(
     tree: RegionTree,
     values: np.ndarray,
     region_ids: Sequence[int],
     k: int = 5,
+    wall: Optional[np.ndarray] = None,
 ) -> DisparityReport:
     """Disparity search (paper §4.2.2 + §4.3).
 
@@ -274,9 +374,19 @@ def find_disparity_bottlenecks(
     Severity >= HIGH marks a CCR; a CCR is a CCCR when it is a leaf or its
     severity exceeds that of every child CCR (the paper's ST case: equal
     child severity promotes the child, not the parent).
+
+    With ``wall`` (per-region mean wall seconds, aligned with
+    ``region_ids``) severities come from :func:`time_share_severity`:
+    inclusive parents are banded on the share of time they own
+    exclusively (then inherit their hottest child's band), and a mildly
+    spread profile produces no bands at all.  Without ``wall`` the legacy
+    relative banding is used unchanged.
     """
     values = np.asarray(values, dtype=np.float64)
-    sev = kmeans_severity(values, k=k)
+    if wall is not None:
+        sev = time_share_severity(tree, values, region_ids, wall, k=k)
+    else:
+        sev = kmeans_severity(values, k=k)
     sev_by_id = {rid: int(s) for rid, s in zip(region_ids, sev)}
     val_by_id = {rid: float(v) for rid, v in zip(region_ids, values)}
     regions = {r.region_id: r for r in tree.regions()

@@ -1,6 +1,7 @@
 from . import faults
 from .corpus import (CORPUS, CorpusEntry, CorpusRunResult,
                      FaultedSyntheticCollector, GroundTruth,
+                     MitigatedTrainCollector, RecoveryTruth,
                      RuntimeFaultCollector, TrainFaultCollector,
                      baseline_mpibzip2, baseline_npar1way, baseline_st,
                      corpus_entries, evaluate_corpus, model_region_tree,
@@ -13,6 +14,7 @@ from .st import (IMBALANCE_11, st_fine_scenario, st_scenario,
 
 __all__ = ["CORPUS", "CorpusEntry", "CorpusRunResult",
            "FaultedSyntheticCollector", "GroundTruth", "IMBALANCE_11",
+           "MitigatedTrainCollector", "RecoveryTruth",
            "RuntimeFaultCollector", "TrainFaultCollector",
            "baseline_mpibzip2", "baseline_npar1way",
            "baseline_st", "corpus_entries", "evaluate_corpus", "faults",

@@ -118,6 +118,8 @@ class WindowVerdictLog:
         wv = self.windows[i]
         return {
             "onset_window": i,
+            # Window-granular; OnlineAnalyzer.onset_report refines this by
+            # bisection inside the window when stride < window_steps.
             "onset_step": wv.start,
             "window": [wv.start, wv.stop],
             "persist": self.persist,
@@ -150,6 +152,11 @@ class OnlineAnalyzer:
         self.analyzer_kw = dict(analyzer_kw or {})
         self._analyzer = analyzer
         self.log = WindowVerdictLog(persist=persist)
+        # Most recent consumed source (SpooledTrace or RegionTrace), kept
+        # so onset_report can re-analyze prefixes of the onset window to
+        # bisect the onset *step* — overlapping windows (stride <
+        # window_steps) localize in time finer than a whole window.
+        self._source: Any = None
 
     # -- analyzer resolution ----------------------------------------------
     def _resolve_analyzer(self, schema, meta) -> AutoAnalyzer:
@@ -188,6 +195,7 @@ class OnlineAnalyzer:
         it overlaps.  When the spool is complete, the trailing partial
         window (if any) is analyzed as the final window."""
         spooled.reload()
+        self._source = spooled
         analyzer = self._resolve_analyzer(spooled.schema, spooled.meta)
         out: List[WindowVerdict] = []
         while True:
@@ -207,6 +215,7 @@ class OnlineAnalyzer:
         """Run every window of an already-materialized trace (a finished
         in-memory run, or a loaded artifact) through the analyzer —
         window-for-window identical to tailing the same run's spool."""
+        self._source = trace
         analyzer = self._resolve_analyzer(trace.schema, trace.meta)
         while True:
             start, stop = self._next_bounds()
@@ -223,4 +232,52 @@ class OnlineAnalyzer:
 
     def onset_report(self, kind: Optional[str] = None
                      ) -> Optional[Dict[str, Any]]:
-        return self.log.onset_report(kind)
+        """The log's onset report, refined to step granularity when the
+        windows overlap (stride < window_steps): the onset *step* is
+        bisected inside the first flagged window as the first step whose
+        inclusion flips the window's prefix verdict to flagged.
+        Mitigation latency (time-to-mitigate accounting, train/mitigate)
+        is measured from this step, not from the window boundary."""
+        rep = self.log.onset_report(kind)
+        if (rep is None or self.stride >= self.window_steps
+                or self._source is None):
+            return rep
+        rep["onset_step"] = self._bisect_onset_step(
+            rep["window"][0], rep["window"][1], kind)
+        return rep
+
+    def _window_trace(self, start: int, stop: int
+                      ) -> Tuple[RegionTrace, int]:
+        """The onset window's steps as a trace plus the base step its
+        step 0 corresponds to."""
+        src = self._source
+        if isinstance(src, RegionTrace):
+            return src, 0
+        return src.window(start, stop), start
+
+    def _bisect_onset_step(self, start: int, stop: int,
+                           kind: Optional[str]) -> int:
+        """First step s in [start, stop) such that analyzing the prefix
+        [start, s] of the onset window yields a flagged verdict.  A
+        persistent fault makes the prefix verdict monotone in practice
+        (more faulty steps can only strengthen the signal), so binary
+        search applies; the full window is flagged by construction, which
+        bounds the search."""
+        trace, base = self._window_trace(start, stop)
+        analyzer = self._analyzer
+
+        def flagged(prefix_stop: int) -> bool:
+            res = analyzer.analyze_trace(
+                trace, window=(start - base, prefix_stop - base))
+            wv = WindowVerdict(index=-1, start=start, stop=prefix_stop,
+                               verdict=res.verdict)
+            return wv.flagged(kind)
+
+        lo, hi = start + 1, stop     # prefix end in (start, stop]
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if flagged(mid):
+                hi = mid
+            else:
+                lo = mid + 1
+        return lo - 1

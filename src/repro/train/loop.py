@@ -224,10 +224,15 @@ class TrainerConfig:
     # routing imbalance becomes genuinely executed per-region work.
     trace_expert_iters: Optional[Tuple[Tuple[int, ...], ...]] = None
     trace_probe_tokens: int = 64   # probe tile rows per expert iteration
+    # -- closed-loop mitigation (train/mitigate.py, docs/mitigation.md) ----
+    # A MitigationPolicy (duck-typed: observe(trainer)) consulted after
+    # every traced step; persisted online verdicts trigger actions
+    # (remesh / expert rebalance / checkpoint reschedule).
+    mitigate: Optional[Any] = None
 
     def __post_init__(self) -> None:
         if self.trace_path or self.trace_iters or self.trace_spool_dir \
-                or self.trace_expert_iters:
+                or self.trace_expert_iters or self.mitigate is not None:
             self.trace = True
         if self.trace_iters is not None and \
                 len(self.trace_iters) != self.trace_shards:
@@ -293,6 +298,7 @@ class Trainer:
         self.step = 0
         self.trace: Optional[RegionTrace] = None
         self._step_traces: List[RegionTrace] = []
+        self._last_step_trace: Optional[RegionTrace] = None
         self.spool = None
         if self.tcfg.trace_spool_dir:
             # Lazy import: repro.stream sits above the core trace layer.
@@ -371,6 +377,7 @@ class Trainer:
                 data.append(batch)
         step_trace = self.runner.run_trace(self._shard_states, data)
         self._shard_states = self.runner.final_states
+        self._last_step_trace = step_trace
         if self.spool is not None:
             self.spool.append(step_trace)
         else:
@@ -430,6 +437,19 @@ class Trainer:
         return self.trace
 
     # -- checkpoint/resume --------------------------------------------------
+    def adopt_restore(self, step: int, trees: Dict[str, Any]) -> None:
+        """Adopt a restored checkpoint as the live training state.  In
+        traced mode the emulated shards' replicated states must be
+        refreshed too — they were built from the *initial* params, and a
+        resumed run that kept them would silently continue the shards
+        from scratch while reporting the checkpoint's step."""
+        self.params, self.opt_state = trees["params"], trees["opt_state"]
+        self.step = step
+        if self.tcfg.trace and hasattr(self, "_shard_states"):
+            for s in self._shard_states:
+                s["params"] = self.params
+                s["opt_state"] = self.opt_state
+
     def maybe_resume(self) -> bool:
         d = self.tcfg.ckpt_dir
         if not d:
@@ -439,8 +459,7 @@ class Trainer:
             return False
         templates = {"params": self.params, "opt_state": self.opt_state}
         step, trees = ckpt_mod.restore(d, templates)
-        self.params, self.opt_state = trees["params"], trees["opt_state"]
-        self.step = step
+        self.adopt_restore(step, trees)
         return True
 
     def save(self) -> None:
@@ -476,6 +495,13 @@ class Trainer:
                         metrics["expert_counts"])
             self.history.append(rec)
             self.step += 1
+            if self.tcfg.trace and self.tcfg.mitigate is not None:
+                # Closed loop (train/mitigate.py): the policy windows the
+                # step traces, analyzes, and may act — in place (expert
+                # rebalance, ckpt reschedule) or by raising
+                # MitigationRestart (remesh), which run_with_restarts
+                # handles like any failure.
+                self.tcfg.mitigate.observe(self)
             if self.tcfg.ckpt_every and self.step % self.tcfg.ckpt_every == 0:
                 self.save()
         self.save()

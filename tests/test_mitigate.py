@@ -1,0 +1,239 @@
+"""Closed-loop mitigation (train/mitigate.py, docs/mitigation.md).
+
+Contracts pinned here:
+
+* classification precedence and measurement gating: an injected straggler
+  verdict maps to remesh, a host-I/O cause with periodic saves on maps to
+  checkpoint rescheduling, an expert disparity maps to rebalancing only
+  when the expert is *measured* hot among its peers;
+* the policy is idempotent: the same verdict persisting after its
+  mitigation never re-fires the action;
+* expert rebalancing preserves each shard's total probe budget;
+* the remesh path round-trips through a real checkpoint: the supervised
+  loop drops the slow shard, restores under the scaled-down layout, and
+  finishes with the checkpointed state (and resumed traced trainers
+  refresh their emulated shard states — the resume bugfix);
+* the policy is a no-op on a clean run (no spurious restarts);
+* both recovery corpus entries pass end-to-end.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.analyzer import Verdict
+from repro.scenarios import CORPUS, run_entry_robust
+from repro.stream import WindowVerdict
+from repro.train import (MitigationPolicy, MitigationRestart, Trainer,
+                         TrainerConfig, rebalance_expert_iters,
+                         run_mitigated)
+from repro.train import checkpoint as ckpt_mod
+from repro.train.mitigate import (REBALANCE_EXPERTS, REMESH,
+                                  RESCHEDULE_CKPT)
+
+
+def _verdict(dissimilarity_paths=(), disparity_paths=(), causes=()):
+    return Verdict(
+        dissimilar=bool(dissimilarity_paths),
+        dissimilarity_paths=tuple(dissimilarity_paths),
+        dissimilarity_ccr_paths=tuple(dissimilarity_paths),
+        disparity_paths=tuple(disparity_paths),
+        disparity_ccr_paths=tuple(disparity_paths),
+        cause_attributes=frozenset(causes),
+        dissimilarity_cause_attributes=frozenset(causes),
+        per_path_causes=tuple((p, tuple(sorted(causes)))
+                              for p in disparity_paths))
+
+
+def _wv(index, verdict):
+    return WindowVerdict(index=index, start=index, stop=index + 1,
+                         verdict=verdict)
+
+
+class TestClassification:
+    def test_straggler_maps_to_remesh(self):
+        policy = MitigationPolicy()
+        tcfg = TrainerConfig(trace=True, trace_shards=4)
+        wv = _wv(0, _verdict(dissimilarity_paths=("train/fwd_bwd",)))
+        a = policy.classify(tcfg, wv, np.array([1.0, 1.1, 0.9, 9.0]))
+        assert a is not None and a.kind == REMESH
+        assert a.detail["slow_shard"] == 3
+        assert a.detail["new_shards"] == 3
+        assert a.paths == ("train/fwd_bwd",)
+
+    def test_no_remesh_without_isolated_slow_shard(self):
+        """A dissimilarity verdict without one shard clearly above the
+        rest (e.g. two-cluster noise) does not justify dropping one."""
+        policy = MitigationPolicy()
+        tcfg = TrainerConfig(trace=True, trace_shards=4)
+        wv = _wv(0, _verdict(dissimilarity_paths=("train/fwd_bwd",)))
+        assert policy.classify(
+            tcfg, wv, np.array([1.0, 1.1, 0.9, 1.2])) is None
+
+    def test_host_bytes_with_saves_on_maps_to_reschedule(self):
+        """Checkpoint-stall precedence: the stalled shard is not slow
+        hardware, so rescheduling wins over remeshing."""
+        policy = MitigationPolicy()
+        tcfg = TrainerConfig(trace=True, trace_shards=4, ckpt_every=2,
+                             ckpt_dir="unused")
+        wv = _wv(0, _verdict(dissimilarity_paths=("train/optimizer",),
+                             causes=("host_bytes",)))
+        a = policy.classify(tcfg, wv, np.array([1.0, 1.0, 1.0, 9.0]))
+        assert a is not None and a.kind == RESCHEDULE_CKPT
+        # without periodic saves there is nothing to reschedule: the
+        # slow shard then reads as a genuine straggler
+        tcfg2 = TrainerConfig(trace=True, trace_shards=4, ckpt_every=0)
+        a2 = policy.classify(tcfg2, wv, np.array([1.0, 1.0, 1.0, 9.0]))
+        assert a2 is not None and a2.kind == REMESH
+
+    def test_expert_disparity_gated_by_measurement(self):
+        """All-experts-flagged (the probe tree's standing heavy regions)
+        is not a collapse; only a measured-hot expert triggers."""
+        policy = MitigationPolicy()
+        rows = tuple((4, 48, 4, 4) for _ in range(4))
+        tcfg = TrainerConfig(trace=True, trace_shards=4,
+                             trace_expert_iters=rows)
+        all_flagged = _wv(0, _verdict(disparity_paths=(
+            "train/moe/expert_0", "train/moe/expert_1",
+            "train/moe/expert_2", "train/moe/expert_3")))
+        assert policy.classify(tcfg, all_flagged, np.ones(4),
+                               hot_expert_paths=()) is None
+        a = policy.classify(tcfg, all_flagged, np.ones(4),
+                            hot_expert_paths=("train/moe/expert_1",))
+        assert a is not None and a.kind == REBALANCE_EXPERTS
+        assert a.paths == ("train/moe/expert_1",)
+        assert a.detail["hot_experts"] == [1]
+
+
+class TestRebalance:
+    def test_totals_preserved_and_even(self):
+        rows = ((4, 48, 4, 4), (10, 1, 1, 1))
+        out = rebalance_expert_iters(rows)
+        for before, after in zip(rows, out):
+            assert sum(after) == sum(before)
+            assert max(after) - min(after) <= 1
+
+
+class _StubTrainer:
+    """The minimal surface MitigationPolicy.observe touches."""
+
+    def __init__(self, tree, tcfg):
+        self.region_tree = tree
+        self.tcfg = tcfg
+        self.step = 0
+        self._last_step_trace = None
+        self.saved = 0
+
+    def save(self):
+        self.saved += 1
+
+
+class TestIdempotence:
+    def test_same_verdict_never_refires(self):
+        """An ST compute-straggler trace fed step after step: the remesh
+        fires once the candidate persists, and the *same* verdict
+        persisting afterwards (as if the mitigation had not cleared it)
+        produces no second action."""
+        entry = CORPUS["st/compute-straggler-cr5"]
+        tree, coll = entry.build(0)
+        trace = coll.collect_trace()           # 1 step, 8 processes
+        stub = _StubTrainer(tree, TrainerConfig(trace=True, trace_shards=8))
+        # cr5 is ~1/11 of the ST step, so the 5x fault lifts the whole
+        # shard by ~1.37x; drop the gate below that to exercise firing
+        policy = MitigationPolicy(window_steps=1, persist=2,
+                                  straggler_ratio=1.25)
+
+        stub.step = 1
+        stub._last_step_trace = trace
+        assert policy.observe(stub) is None    # persist not met yet
+        stub.step = 2
+        with pytest.raises(MitigationRestart):
+            policy.observe(stub)
+        assert [a.kind for a in policy.actions] == [REMESH]
+        assert stub.saved == 1                 # checkpointed before raising
+        for s in (3, 4):
+            stub.step = s
+            assert policy.observe(stub) is None
+        assert len(policy.actions) == 1
+        # the dirty windows are visible in the candidate record
+        assert all(c is not None for c in policy.window_candidates)
+
+
+@pytest.mark.slow
+class TestClosedLoop:
+    def _smoke(self, tmp_path, iters, seed=0, steps=4):
+        from repro.configs import get_arch
+        from repro.data import DataConfig
+        from repro.optim import AdamWConfig
+        cfg = get_arch("st-100m").smoke
+        tcfg = TrainerConfig(steps=steps, ckpt_dir=str(tmp_path / "ckpt"),
+                             ckpt_every=0, seed=seed, trace=True,
+                             trace_shards=len(iters), trace_iters=iters,
+                             trace_meta={"analyzer_kw":
+                                         {"threshold_frac": 0.45}})
+        return (cfg, AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50),
+                DataConfig(seq_len=32, global_batch=2 * len(iters),
+                           vocab=cfg.vocab), tcfg)
+
+    def test_remesh_roundtrip_through_checkpoint(self, tmp_path):
+        """The supervised loop catches the straggler, checkpoints, drops
+        the shard, and the finished run's state round-trips through the
+        checkpoint layer under the scaled-down layout."""
+        cfg, opt, data, tcfg = self._smoke(tmp_path, (1, 1, 1, 12))
+        policy = MitigationPolicy(window_steps=1, persist=2,
+                                  analyzer_kw={"threshold_frac": 0.45})
+        trainer = run_mitigated(cfg, opt, data, tcfg, policy)
+        assert [a.kind for a in policy.actions] == [REMESH]
+        assert trainer.tcfg.trace_shards == 3
+        assert trainer.tcfg.trace_iters == (1, 1, 1)
+        assert trainer.step == tcfg.steps
+        # round-trip: the final save restores to exactly the live state
+        templates = {"params": trainer.params,
+                     "opt_state": trainer.opt_state}
+        step, trees = ckpt_mod.restore(tcfg.ckpt_dir, templates)
+        assert step == trainer.step
+        for a, b in zip(jax.tree.leaves(trees["params"]),
+                        jax.tree.leaves(trainer.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    @pytest.mark.parametrize("seed", [0, 7])
+    def test_noop_on_clean_run(self, tmp_path, seed):
+        """Balanced shards: the policy must not fire anything — no
+        actions, no restarts, the shard layout untouched."""
+        cfg, opt, data, tcfg = self._smoke(tmp_path, (1, 1, 1, 1),
+                                           seed=seed)
+        policy = MitigationPolicy(window_steps=1, persist=2,
+                                  analyzer_kw={"threshold_frac": 0.45})
+        trainer = run_mitigated(cfg, opt, data, tcfg, policy)
+        assert policy.actions == []
+        assert not policy.remeshed
+        assert trainer.tcfg.trace_shards == 4
+        assert trainer.step == tcfg.steps
+
+    def test_traced_resume_refreshes_shard_states(self, tmp_path):
+        """The resume bugfix: a traced trainer that resumes from a
+        checkpoint must continue its emulated shards from the restored
+        params, not the fresh init."""
+        cfg, opt, data, tcfg = self._smoke(tmp_path, (1, 1), steps=2)
+        t1 = Trainer(cfg, opt, data, tcfg)
+        t1.run()
+        t2 = Trainer(cfg, opt, data, tcfg)
+        assert t2.maybe_resume()
+        assert t2.step == 2
+        for s in t2._shard_states:
+            for a, b in zip(jax.tree.leaves(s["params"]),
+                            jax.tree.leaves(t2.params)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["train/straggler-remesh-recovery",
+                                  "train/moe-collapse-rebalance-recovery"])
+def test_recovery_entries_end_to_end(name):
+    """The acceptance pin: both recovery entries pass — right verdict,
+    right action, in time, and the run closes clean of the mitigated
+    signature."""
+    r = run_entry_robust(CORPUS[name], seed=0)
+    assert r.passed, (r.recovery_kind, r.mitigation_window, r.clean_after,
+                      sorted(r.found), sorted(r.missed))
+    assert r.recovery_kind == CORPUS[name].recovery.kind

@@ -429,3 +429,47 @@ class TestTrainSpoolEndToEnd:
         online = OnlineAnalyzer(window_steps=1, persist=2)
         online.poll(sp)
         assert online.onset("dissimilarity") == 0
+
+
+class TestOnsetBisection:
+    """Step-granular onset (ISSUE 6 satellite): with overlapping windows
+    (stride < window_steps) the report bisects the onset *step* inside
+    the first flagged window instead of reporting the window boundary."""
+
+    @pytest.mark.parametrize("stride", [1, 2, 3])
+    def test_refines_to_planted_step(self, stride):
+        """Drift planted at step 8: tumbling windows can only say
+        "window [8, 12)"; overlapping ones must pin the step to 8 (or 9 —
+        a single drifting step may sit below the detection threshold)."""
+        _, tree, trace = drift_trace()
+        online = OnlineAnalyzer(tree=tree, window_steps=4, stride=stride,
+                                persist=2)
+        online.process_trace(trace)
+        rep = online.onset_report("dissimilarity")
+        assert rep is not None
+        assert 8 <= rep["onset_step"] <= 9
+        # the refined step stays inside the flagged window
+        assert rep["window"][0] <= rep["onset_step"] < rep["window"][1]
+
+    def test_tumbling_keeps_window_boundary(self):
+        """No overlap, no refinement: the report's onset_step stays the
+        window start (exactly what the log itself says)."""
+        _, tree, trace = drift_trace()
+        online = OnlineAnalyzer(tree=tree, window_steps=4, persist=2)
+        online.process_trace(trace)
+        rep = online.onset_report("dissimilarity")
+        assert rep["onset_step"] == 8 == rep["window"][0]
+        assert online.log.onset_report("dissimilarity")["onset_step"] == 8
+
+    def test_spool_backed_bisection(self, tmp_path):
+        """The refinement works identically when the source is a spool:
+        the onset window is reassembled from its segments for the prefix
+        re-analysis."""
+        _, tree, trace = drift_trace()
+        sp = spool_up(trace, str(tmp_path / "sp"), chunk_steps=3)
+        online = OnlineAnalyzer(tree=tree, window_steps=4, stride=2,
+                                persist=2)
+        online.poll(sp)
+        rep = online.onset_report("dissimilarity")
+        assert rep is not None
+        assert 8 <= rep["onset_step"] <= 9
