@@ -17,6 +17,12 @@ Analyzer keyword arguments default to the ``analyzer_kw`` the collector
 recorded in the trace header (so a corpus-emitted artifact replays under
 the entry's exact configuration) and can be overridden with
 ``--analyzer-kw '{"threshold_frac": 0.2}'``.
+
+Exit codes: 0 — analyzed; 2 — usage error (argparse); 3 — artifact
+missing; 4 — artifact present but damaged (truncated, bit-rotted, or a
+malformed header: the structured ``TraceFormatError`` is printed with the
+offending member so CI logs name the corruption, not just a numpy
+traceback).
 """
 from __future__ import annotations
 
@@ -47,9 +53,17 @@ def main(argv=None) -> int:
     if args.per_window is not None and args.per_window < 1:
         ap.error("--per-window must be a positive step count")
 
-    from repro.core import AutoAnalyzer, RegionTrace, render, tree_from_schema
+    from repro.core import (AutoAnalyzer, RegionTrace, TraceFormatError,
+                            render, tree_from_schema)
 
-    trace = RegionTrace.load(args.trace)
+    try:
+        trace = RegionTrace.load(args.trace)
+    except FileNotFoundError as e:
+        print(str(e), file=sys.stderr)
+        return 3
+    except TraceFormatError as e:
+        print(f"corrupt trace artifact: {e}", file=sys.stderr)
+        return 4
     tree = tree_from_schema(trace.schema)
     kw = dict(trace.meta.get("analyzer_kw", {}))
     if args.analyzer_kw:

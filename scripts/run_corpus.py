@@ -14,6 +14,13 @@ drive a MitigationPolicy, and the ``recov`` column reports the window the
 action fired at against the entry's time-to-mitigate bound (got/want,
 like ``onset``); the detail line below adds the action kind and the
 post-mitigation clean-window tail.
+
+Chaos-backend entries (``--backend chaos``, docs/robustness.md) inject
+deterministic infrastructure faults into the pipeline itself; the
+``chaos`` column reports matched/comparable window verdicts between the
+recovered chaos run and a clean run of the same scenario (every
+comparable window must match bit-for-bit), and the detail line adds the
+quarantine/adoption/stall/fallback accounting.
 """
 from __future__ import annotations
 
@@ -26,7 +33,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend",
-                    choices=("synthetic", "runtime", "train", "recovery"),
+                    choices=("synthetic", "runtime", "train", "recovery",
+                             "chaos"),
                     default=None, help="restrict to one backend")
     ap.add_argument("--entry", action="append", default=None,
                     help="run only these entries (repeatable)")
@@ -79,9 +87,9 @@ def main(argv=None) -> int:
         return 2
     wname = max(len(r.entry.name) for r, _ in results) + 2
     print(f"{'entry':{wname}s} {'kind':13s} {'prec':>6s} {'recall':>6s} "
-          f"{'causes':>6s} {'onset':>7s} {'recov':>7s} {'wall_s':>7s}  "
-          f"status")
-    print("-" * (wname + 68))
+          f"{'causes':>6s} {'onset':>7s} {'recov':>7s} {'chaos':>7s} "
+          f"{'wall_s':>7s}  status")
+    print("-" * (wname + 76))
     failures = 0
     for r, walls in results:
         status = "ok" if r.passed else "FAIL"
@@ -94,15 +102,28 @@ def main(argv=None) -> int:
         rwant = r.entry.recovery
         recov = "-" if rwant is None \
             else f"{r.mitigation_window}/{rwant.mitigate_by_window}"
+        # chaos got/want: matched vs comparable clean-run windows (every
+        # comparable window must reproduce the clean verdict exactly)
+        o = r.chaos_outcome
+        chaos = "-" if o is None else f"{o.matched}/{o.comparable}"
         print(f"{r.entry.name:{wname}s} {r.entry.truth.kind:13s} "
               f"{r.precision:6.2f} {r.recall:6.2f} {r.cause_recall:6.2f} "
-              f"{onset:>7s} {recov:>7s} {sum(walls):7.3f}  {status}")
+              f"{onset:>7s} {recov:>7s} {chaos:>7s} {sum(walls):7.3f}  "
+              f"{status}")
         if rwant is not None:
             print(f"{'':{wname}s}   recovery: got {r.recovery_kind} at "
                   f"window {r.mitigation_window}, clean tail "
                   f"{r.clean_after} (want {rwant.kind} by window "
                   f"{rwant.mitigate_by_window}, clean >= "
                   f"{rwant.clean_windows})")
+        if o is not None:
+            fb = (f", fell back step {o.fallback_from}->{o.restored_step}"
+                  if o.fallback_from is not None else "")
+            print(f"{'':{wname}s}   chaos: survived={o.survived} "
+                  f"quarantined={o.quarantined} adopted={o.adopted} "
+                  f"degraded={o.degraded} stalled={o.stalled}{fb}")
+            for msg in (r.chaos_failures or ()):
+                print(f"{'':{wname}s}   chaos FAIL: {msg}")
         if len(walls) > 1:
             # a retried wall-clock entry: report every attempt, not just
             # the one whose result was kept
@@ -117,7 +138,7 @@ def main(argv=None) -> int:
             print(f"{'':{wname}s}   causes wanted {sorted(want)}, "
                   f"got {sorted(r.causes_found)} at the planted paths "
                   f"(globally: {sorted(r.verdict.cause_attributes)})")
-    print("-" * (wname + 68))
+    print("-" * (wname + 76))
     print(f"{len(results) - failures}/{len(results)} entries passed "
           f"(seed {args.seed})")
     return 1 if failures else 0

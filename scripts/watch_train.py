@@ -24,9 +24,21 @@ and can be overridden with ``--analyzer-kw '{"threshold_frac": 0.2}'``.
 ``--follow`` keeps polling until the producer closes the spool; without it
 the script processes everything flushed so far and exits (nonzero if the
 spool is still incomplete, so CI can assert it saw a whole run).
+``--follow --max-stall SEC`` bounds the wait: when the spool makes no
+progress for SEC seconds the producer is presumed dead and the script
+exits rather than tailing a corpse forever (exit code 4 below; recover
+the spool with ``TraceSpool.recover`` and re-analyze).
 ``--finalize PATH`` converts the complete spool into the classic
 single-``.npz`` artifact — byte-identical to the monolithic save of the
 same run.
+
+Windows the analyzer could not judge (a quarantined segment's range, a
+non-finite sample burst) print as ``DEGRADED`` with the reason — they are
+reported, never silently skipped, and never count toward onset.
+
+Exit codes: 0 — complete run analyzed; 2 — usage error (argparse);
+3 — spool missing/invalid, or run still in progress without ``--follow``;
+4 — ``--max-stall`` exceeded, producer presumed dead.
 """
 from __future__ import annotations
 
@@ -37,6 +49,9 @@ import time
 
 
 def window_line(wv) -> str:
+    if wv.degraded:
+        return (f"window {wv.index:3d}  steps [{wv.start}:{wv.stop})  "
+                f"{'DEGRADED':26s} {wv.reason}")
     kinds = ",".join(sorted(wv.kinds)) or "-"
     paths = ",".join(wv.paths()) or "-"
     return (f"window {wv.index:3d}  steps [{wv.start}:{wv.stop})  "
@@ -63,6 +78,9 @@ def main(argv=None) -> int:
                     help="keep polling until the producer closes the spool")
     ap.add_argument("--interval", type=float, default=1.0, metavar="SEC",
                     help="poll interval with --follow (default 1s)")
+    ap.add_argument("--max-stall", type=float, default=None, metavar="SEC",
+                    help="with --follow: exit 4 (producer presumed dead) "
+                         "when the spool makes no progress for SEC seconds")
     ap.add_argument("--json", action="store_true",
                     help="emit one JSON document instead of text lines")
     ap.add_argument("--finalize", default=None, metavar="PATH",
@@ -75,11 +93,16 @@ def main(argv=None) -> int:
 
     import os
 
-    from repro.stream import MANIFEST_NAME, OnlineAnalyzer, SpooledTrace
+    from repro.stream import (MANIFEST_NAME, OnlineAnalyzer,
+                              ProducerStalledError, SpooledTrace,
+                              StallDetector)
 
     # A live run has no manifest until its first chunk flushes; --follow
-    # waits for it rather than dying at startup.  A *present* but invalid
+    # waits for it rather than dying at startup — but a producer that
+    # died *before* its first flush must not be tailed forever either,
+    # so --max-stall bounds this wait too.  A *present* but invalid
     # manifest (foreign file, newer version) still aborts.
+    waited = 0.0
     while True:
         try:
             spooled = SpooledTrace(args.spool)
@@ -90,18 +113,34 @@ def main(argv=None) -> int:
             if not (args.follow and missing):
                 print(str(e), file=sys.stderr)
                 return 3
+            if args.max_stall is not None and waited >= args.max_stall:
+                print(f"{args.spool}: no spool manifest after "
+                      f"{waited:.1f}s — producer presumed dead",
+                      file=sys.stderr)
+                return 4
             time.sleep(args.interval)
+            waited += args.interval
     kw = json.loads(args.analyzer_kw) if args.analyzer_kw else None
     online = OnlineAnalyzer(window_steps=args.window, stride=args.stride,
                             persist=args.persist, analyzer_kw=kw)
 
+    detector = (StallDetector(args.max_stall, base_interval=args.interval)
+                if args.follow and args.max_stall is not None else None)
     while True:
         for wv in online.poll(spooled):
             if not args.json:
                 print(window_line(wv), flush=True)
         if spooled.complete or not args.follow:
             break
-        time.sleep(args.interval)
+        if detector is not None:
+            try:
+                delay = detector.observe(spooled)
+            except ProducerStalledError as e:
+                print(str(e), file=sys.stderr)
+                return 4
+            time.sleep(delay)
+        else:
+            time.sleep(args.interval)
 
     onset = online.onset_report(args.kind)
     if args.json:
@@ -111,10 +150,15 @@ def main(argv=None) -> int:
             "n_steps": spooled.n_steps,
             "window_steps": args.window,
             "persist": args.persist,
-            "windows": [{"index": wv.index, "steps": [wv.start, wv.stop],
-                         "kinds": sorted(wv.kinds),
-                         "verdict": wv.verdict.doc()}
-                        for wv in online.log.windows],
+            "windows": [
+                ({"index": wv.index, "steps": [wv.start, wv.stop],
+                  "degraded": True, "reason": wv.reason,
+                  "detail": wv.detail}
+                 if wv.degraded else
+                 {"index": wv.index, "steps": [wv.start, wv.stop],
+                  "kinds": sorted(wv.kinds),
+                  "verdict": wv.verdict.doc()})
+                for wv in online.log.windows],
             "onset": onset,
         }
         json.dump(doc, sys.stdout, indent=1, sort_keys=True)

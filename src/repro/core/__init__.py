@@ -32,6 +32,6 @@ from .search import (DisparityReport, DissimilarityReport,
                      find_disparity_bottlenecks,
                      find_dissimilarity_bottlenecks, severity_banding)
 from .trace import (RATE_METRICS, TRACE_FORMAT_VERSION, RegionTrace,
-                    schema_from_tree, tree_from_schema)
+                    TraceFormatError, schema_from_tree, tree_from_schema)
 
 __all__ = [name for name in dir() if not name.startswith("_")]

@@ -43,6 +43,26 @@ from .regions import CodeRegion, RegionTree
 
 TRACE_FORMAT_VERSION = 1
 
+
+class TraceFormatError(ValueError):
+    """Structured load failure for a RegionTrace artifact.
+
+    Carries ``path`` (the artifact), ``member`` (the zip member that broke,
+    or None for container/header-level damage) and ``reason`` — so spool
+    recovery can quarantine with a recorded cause and
+    ``scripts/analyze_trace.py`` can map corruption to a distinct exit
+    code instead of leaking raw ``zipfile``/JSON tracebacks.  Subclasses
+    ``ValueError`` so existing not-an-artifact handlers keep working.
+    """
+
+    def __init__(self, path: str, reason: str,
+                 member: Optional[str] = None):
+        self.path = path
+        self.member = member
+        self.reason = reason
+        where = f"{path}[{member}]" if member else path
+        super().__init__(f"{where}: {reason}")
+
 # Metrics that are rates (averaged over steps); everything else is a
 # quantity (summed over steps).
 RATE_METRICS = frozenset({VMEM_PRESSURE, HBM_INTENSITY})
@@ -284,19 +304,68 @@ class RegionTrace:
 
     @classmethod
     def load(cls, path: str) -> "RegionTrace":
-        with np.load(path, allow_pickle=False) as z:
+        """Load an artifact, raising :class:`TraceFormatError` (with path /
+        member / reason) on truncation, corruption, or a malformed header —
+        never a raw ``zipfile``/``zlib``/JSON exception.  A missing file
+        still raises ``FileNotFoundError`` (absent and damaged are
+        different failures: recovery quarantines one, not the other)."""
+        import zipfile
+        try:
+            z = np.load(path, allow_pickle=False)
+        except FileNotFoundError:
+            raise
+        except (zipfile.BadZipFile, OSError, ValueError) as e:
+            raise TraceFormatError(
+                path, f"not a readable .npz container: {e}") from e
+        with z:
             if "__header__" not in z:
-                raise ValueError(f"{path}: not a RegionTrace artifact")
-            header = json.loads(str(z["__header__"]))
+                raise TraceFormatError(
+                    path, "no __header__ member — not a RegionTrace "
+                    "artifact")
+            try:
+                header = json.loads(str(z["__header__"]))
+            except Exception as e:
+                raise TraceFormatError(
+                    path, f"unreadable header: {e}",
+                    member="__header__") from e
+            if not isinstance(header, dict):
+                raise TraceFormatError(
+                    path, "header is not a JSON object",
+                    member="__header__")
             if header.get("format") != "repro.region_trace":
                 raise ValueError(f"{path}: not a RegionTrace artifact")
-            if header["version"] > TRACE_FORMAT_VERSION:
+            try:
+                version = header["version"]
+                metrics = header["metrics"]
+            except KeyError as e:
+                raise TraceFormatError(
+                    path, f"header missing required key {e}",
+                    member="__header__") from e
+            if version > TRACE_FORMAT_VERSION:
                 raise ValueError(
-                    f"{path}: format version {header['version']} is newer "
+                    f"{path}: format version {version} is newer "
                     f"than supported {TRACE_FORMAT_VERSION}")
-            data = {k: z[f"metric:{k}"] for k in header["metrics"]}
-        return cls(region_ids=list(header["region_ids"]),
-                   n_processes=header["n_processes"],
-                   n_steps=header["n_steps"], n_repeats=header["n_repeats"],
-                   schema=header["schema"], data=data,
-                   meta=header.get("meta", {}))
+            data = {}
+            for k in metrics:
+                member = f"metric:{k}"
+                if member not in z:
+                    raise TraceFormatError(
+                        path, "metric member listed in header but absent",
+                        member=member)
+                try:
+                    data[k] = z[member]
+                except Exception as e:
+                    raise TraceFormatError(
+                        path, f"corrupt metric member: {e}",
+                        member=member) from e
+        try:
+            return cls(region_ids=list(header["region_ids"]),
+                       n_processes=header["n_processes"],
+                       n_steps=header["n_steps"],
+                       n_repeats=header["n_repeats"],
+                       schema=header["schema"], data=data,
+                       meta=header.get("meta", {}))
+        except (KeyError, TypeError, ValueError) as e:
+            # includes shape validation: header geometry vs actual arrays
+            raise TraceFormatError(
+                path, f"malformed header: {e!r}", member="__header__") from e

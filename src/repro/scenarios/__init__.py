@@ -1,4 +1,8 @@
 from . import faults
+from .chaos import (ChaosOutcome, ChaosTruth, CheckpointChaosCollector,
+                    CorruptLatestCheckpoint, FlipBytesInSegment,
+                    KillProducerMidChunk, SpoolChaosCollector,
+                    StallProducer, TruncateSegment)
 from .corpus import (CORPUS, CorpusEntry, CorpusRunResult,
                      FaultedSyntheticCollector, GroundTruth,
                      MitigatedTrainCollector, RecoveryTruth,
@@ -12,11 +16,14 @@ from .npar1way import npar1way_scenario
 from .st import (IMBALANCE_11, st_fine_scenario, st_scenario,
                  st_total_time)
 
-__all__ = ["CORPUS", "CorpusEntry", "CorpusRunResult",
-           "FaultedSyntheticCollector", "GroundTruth", "IMBALANCE_11",
-           "MitigatedTrainCollector", "RecoveryTruth",
-           "RuntimeFaultCollector", "TrainFaultCollector",
-           "baseline_mpibzip2", "baseline_npar1way",
+__all__ = ["CORPUS", "ChaosOutcome", "ChaosTruth", "CorpusEntry",
+           "CorpusRunResult", "CheckpointChaosCollector",
+           "CorruptLatestCheckpoint", "FaultedSyntheticCollector",
+           "FlipBytesInSegment", "GroundTruth", "IMBALANCE_11",
+           "KillProducerMidChunk", "MitigatedTrainCollector",
+           "RecoveryTruth", "RuntimeFaultCollector",
+           "SpoolChaosCollector", "StallProducer", "TrainFaultCollector",
+           "TruncateSegment", "baseline_mpibzip2", "baseline_npar1way",
            "baseline_st", "corpus_entries", "evaluate_corpus", "faults",
            "model_region_tree", "mpibzip2_scenario", "npar1way_scenario",
            "run_entry", "run_entry_robust", "score_verdict",

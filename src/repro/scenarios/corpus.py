@@ -21,6 +21,15 @@ backends:
   (train/loop.py): the actual forward/backward + optimizer regions,
   fault-injected through per-shard iteration counts, analyzed from the
   trace the trainer emits.
+* ``recovery`` — the closed mitigation loop: live per-step verdicts
+  drive a :class:`MitigationPolicy` and the entry is additionally scored
+  against a :class:`RecoveryTruth` (which action, by when, and that the
+  fault actually cleared).
+* ``chaos``    — infrastructure fault injection (scenarios/chaos.py):
+  the fault lands on the *pipeline itself* (spool writer, checkpoint
+  writer, live consumer) and the entry is scored against a
+  :class:`~repro.scenarios.chaos.ChaosTruth` — survival, quarantine,
+  and bit-identical post-recovery verdicts on unaffected windows.
 
 ``evaluate_corpus`` scores every entry (precision/recall of located paths,
 cause recall) and backs both tests/test_fault_corpus.py and
@@ -42,6 +51,10 @@ from repro.core import (COMM_BYTES, FLOPS, HBM_INTENSITY, HOST_BYTES,
 from repro.stream import OnlineAnalyzer
 
 from . import faults as F
+from .chaos import (ChaosTruth, CheckpointChaosCollector,
+                    CorruptLatestCheckpoint, FlipBytesInSegment,
+                    KillProducerMidChunk, SpoolChaosCollector,
+                    StallProducer, TruncateSegment)
 
 N_PROCESSES = 8
 
@@ -75,7 +88,7 @@ class RecoveryTruth:
 class CorpusEntry:
     name: str
     app: str                                # st | npar1way | mpibzip2 | moe | transformer | runtime
-    backend: str                            # synthetic | runtime | train | recovery
+    backend: str                 # synthetic | runtime | train | recovery | chaos
     description: str
     build: Callable[[int], Tuple[RegionTree, Any]]
     truth: GroundTruth
@@ -101,6 +114,12 @@ class CorpusEntry:
     # scored from the verdict that *triggered* the action: the loop must
     # have acted for the right reason).
     recovery: Optional[RecoveryTruth] = None
+    # -- chaos (infrastructure fault injection, scenarios/chaos.py) --------
+    # When set, the collector runs an infrastructure-fault archetype
+    # against the real pipeline and the outcome (survival, quarantine
+    # accounting, clean-vs-chaos window verdict identity) must satisfy
+    # this truth in addition to the regular verdict score.
+    chaos: Optional[ChaosTruth] = None
 
 
 CORPUS: Dict[str, CorpusEntry] = {}
@@ -411,12 +430,21 @@ def _train(iters_per_shard: Optional[Tuple[int, ...]] = None,
 def _train_recovery(iters_per_shard: Optional[Tuple[int, ...]] = None,
                     steps: int = 6, arch: str = "st-100m",
                     expert_iters: Optional[Tuple[Tuple[int, ...], ...]]
+                    = None, ckpt_every: int = 0,
+                    analyzer_kw: Tuple[Tuple[str, Any], ...] = _TRAIN_KW,
+                    trace_inject_for: Optional[Callable[[int], Any]]
                     = None):
     """Builder for the recovery backend: the same region-instrumented
     smoke Trainer as ``_train``, but supervised by a
     :class:`MitigationPolicy` watching per-step verdict windows — the
     closed loop of docs/mitigation.md.  Checkpoints go to a fresh
-    temporary directory (the remesh path must save/restore through it)."""
+    temporary directory (the remesh path must save/restore through it).
+
+    ``trace_inject_for`` (seed -> TrainerConfig.trace_inject callable)
+    plants faults through the trainer's trace-injection seam — the
+    injection sees the *live* config, so a mitigation that edits the
+    config (e.g. reschedule_ckpt phase-shifting ``ckpt_every``) genuinely
+    stops the fault, closing the loop end-to-end."""
     if iters_per_shard is None and expert_iters is None:
         raise ValueError("need iters_per_shard and/or expert_iters")
     shards = (len(iters_per_shard) if iters_per_shard is not None
@@ -431,15 +459,18 @@ def _train_recovery(iters_per_shard: Optional[Tuple[int, ...]] = None,
         from repro.train import MitigationPolicy, TrainerConfig
         cfg = get_arch(arch).smoke
         policy = MitigationPolicy(window_steps=1, persist=2,
-                                  analyzer_kw=dict(_TRAIN_KW))
+                                  analyzer_kw=dict(analyzer_kw))
         tcfg = TrainerConfig(
             steps=steps,
             ckpt_dir=tempfile.mkdtemp(prefix="repro-recovery-"),
-            ckpt_every=0, seed=seed, trace=True, trace_shards=shards,
+            ckpt_every=ckpt_every, seed=seed, trace=True,
+            trace_shards=shards,
             trace_iters=(tuple(iters_per_shard)
                          if iters_per_shard is not None else None),
             trace_expert_iters=expert_iters, trace_repeats=1,
-            trace_meta={"analyzer_kw": dict(_TRAIN_KW)})
+            trace_inject=(trace_inject_for(seed)
+                          if trace_inject_for is not None else None),
+            trace_meta={"analyzer_kw": dict(analyzer_kw)})
         coll = MitigatedTrainCollector(
             cfg, AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50),
             DataConfig(seq_len=32, global_batch=2 * shards,
@@ -475,6 +506,48 @@ def _runtime(iters_per_shard: Tuple[int, ...], size: int = 96):
     return build
 
 
+def _ckpt_stall_inject(seed: int):
+    """TrainerConfig.trace_inject closure for the reschedule-ckpt loop:
+    a host-I/O burst + wall stall lands on shard 2's optimizer region on
+    every step that coincides with a periodic save — but only while
+    ``ckpt_every < 2``, so the policy's +1 phase shift genuinely clears
+    the collision and the trailing windows come back clean."""
+    def inject(trainer, step, trace):
+        t = trainer.tcfg
+        if t.ckpt_every and t.ckpt_every < 2 \
+                and (step + 1) % t.ckpt_every == 0:
+            return F.inject_trace(
+                trainer.region_tree, trace,
+                (F.CheckpointStall("train/optimizer", proc=2),),
+                seed=seed * 613 + step)
+        return None
+    return inject
+
+
+def _chaos_spool(archetype, n_steps: int = 16, chunk_steps: int = 2,
+                 window_steps: int = 4):
+    """Builder for spool-layer chaos entries: the ST compute-straggler
+    scenario (active on every step, so each window flags it) produced
+    through a real TraceSpool under the archetype's interference."""
+    def build(seed: int):
+        tree, behaviors = baseline_st()
+        inner = FaultedSyntheticCollector(
+            tree, behaviors,
+            (F.ComputeStraggler("ST/cr5", procs=(6,), factor=5.0),),
+            seed, n_steps=n_steps)
+        return tree, SpoolChaosCollector(
+            tree, inner.collect_trace, archetype, seed,
+            chunk_steps=chunk_steps, window_steps=window_steps, persist=2)
+    return build
+
+
+def _chaos_ckpt(archetype):
+    def build(seed: int):
+        tree, _ = baseline_st()     # every entry exposes a region tree
+        return tree, CheckpointChaosCollector(archetype, seed)
+    return build
+
+
 # -- scoring --------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -504,6 +577,16 @@ class CorpusRunResult:
     recovery_kind: Optional[str] = None      # first MitigationAction kind
     mitigation_window: Optional[int] = None  # window index it fired at
     clean_after: Optional[int] = None        # trailing clean windows
+    # -- chaos accounting (entries with ChaosTruth) ------------------------
+    chaos_outcome: Any = None                # full ChaosOutcome
+    chaos_failures: Optional[List[str]] = None  # ChaosTruth violations
+
+    @property
+    def chaos_ok(self) -> Optional[bool]:
+        """None for non-chaos entries; else whether the recovery held."""
+        if self.chaos_failures is None:
+            return None
+        return not self.chaos_failures
 
     @property
     def recovered(self) -> bool:
@@ -524,7 +607,8 @@ class CorpusRunResult:
                 and (self.entry.expect_onset_window is None
                      or self.onset_window
                      == self.entry.expect_onset_window)
-                and self.recovered)
+                and self.recovered
+                and self.chaos_ok is not False)
 
 
 def _related(a: str, b: str) -> bool:
@@ -580,6 +664,19 @@ def run_entry(entry: CorpusEntry, seed: int = 0) -> CorpusRunResult:
     windows — the same trace the whole-run verdict came from, so the
     onset check costs no extra collection."""
     tree, collector = entry.build(seed)
+    if entry.backend == "chaos":
+        # Chaos backend: the archetype attacks the pipeline, recovery
+        # runs, and the post-recovery flagged verdict (when the scenario
+        # plants one) is scored like any other entry — locating the
+        # planted fault *through* the damaged artifacts is the point.
+        outcome = collector.run_chaos()
+        from .chaos import EMPTY_VERDICT
+        r = score_verdict(entry, outcome.verdict or EMPTY_VERDICT)
+        r.collector = collector
+        r.chaos_outcome = outcome
+        r.chaos_failures = (entry.chaos.check(outcome)
+                            if entry.chaos is not None else [])
+        return r
     if entry.recovery is not None:
         # Recovery backend: the closed loop runs the whole (possibly
         # remeshed) training; the fault location is scored from the
@@ -1016,4 +1113,119 @@ register_entry(CorpusEntry(
     truth=GroundTruth("dissimilarity", frozenset({"rt/solver"})),
     analyzer_kw=(("threshold_frac", 0.45),),
     min_precision=0.2,
+))
+
+# Checkpoint-stall collision -> reschedule_ckpt, in place: every periodic
+# save lands a host-I/O burst + wall stall on shard 2's optimizer
+# (injected through the trainer's trace seam, conditioned on the *live*
+# ckpt_every), the policy phase-shifts the cadence, and — because the
+# injection reads the updated config — the collision genuinely stops.
+_CKPT_STALL_KW = _TRAIN_KW + (("similarity_metric", WALL_TIME),)
+
+register_entry(CorpusEntry(
+    name="train/ckpt-stall-reschedule-recovery",
+    app="train", backend="recovery",
+    description="Closed loop: periodic saves collide with shard 2's "
+                "optimizer (host-I/O burst + wall stall each save step); "
+                "reschedule_ckpt phase-shifts ckpt_every at window 1 and "
+                "the collision stops",
+    build=_train_recovery(iters_per_shard=(1, 1, 1, 1), steps=6,
+                          ckpt_every=1, analyzer_kw=_CKPT_STALL_KW,
+                          trace_inject_for=_ckpt_stall_inject),
+    truth=GroundTruth("dissimilarity", frozenset({"train/optimizer"}),
+                      frozenset({HOST_BYTES})),
+    analyzer_kw=_CKPT_STALL_KW,
+    min_precision=0.2,
+    recovery=RecoveryTruth(kind="reschedule_ckpt", mitigate_by_window=1,
+                           clean_windows=3),
+))
+
+
+# -- chaos: infrastructure fault injection (scenarios/chaos.py) -----------
+#
+# The fault lands on the pipeline itself.  Spool entries run the ST
+# compute-straggler scenario (16 steps, 2-step segments, 4-step verdict
+# windows — the fault is active in every window) twice: clean and under
+# the archetype.  After TraceSpool.recover the chaos run must survive,
+# quarantine exactly the damage, and reproduce the clean run's verdicts
+# bit-for-bit on every window the fault did not touch.  Deterministic at
+# any seed; CI replays {0, 1, 7}.
+
+_CHAOS_ST_TRUTH = GroundTruth("dissimilarity", frozenset({"ST/cr5"}),
+                              frozenset({FLOPS}))
+
+register_entry(CorpusEntry(
+    name="chaos/kill-producer-torn-segment",
+    app="chaos", backend="chaos",
+    description="Producer killed between segment write and rename: the "
+                "torn .tmp is quarantined, 10 of 16 steps salvage, both "
+                "complete windows match the clean run",
+    build=_chaos_spool(KillProducerMidChunk(
+        kill_segment=5, point="spool.segment.written")),
+    truth=_CHAOS_ST_TRUTH,
+    chaos=ChaosTruth(min_quarantined=1, min_matched_windows=2),
+))
+
+register_entry(CorpusEntry(
+    name="chaos/kill-producer-orphan-segment",
+    app="chaos", backend="chaos",
+    description="Producer killed between segment rename and manifest "
+                "update: recovery adopts the orphan segment, 12 of 16 "
+                "steps salvage, all three windows match the clean run",
+    build=_chaos_spool(KillProducerMidChunk(
+        kill_segment=5, point="spool.segment.renamed")),
+    truth=_CHAOS_ST_TRUTH,
+    chaos=ChaosTruth(expect_adopted=1, min_matched_windows=3),
+))
+
+register_entry(CorpusEntry(
+    name="chaos/truncate-segment",
+    app="chaos", backend="chaos",
+    description="Flushed segment loses its tail on disk (seeded "
+                "truncation): length check quarantines it, the window "
+                "over the hole degrades, the other three match clean",
+    build=_chaos_spool(TruncateSegment(segment=1)),
+    truth=_CHAOS_ST_TRUTH,
+    chaos=ChaosTruth(min_quarantined=1, min_degraded=1,
+                     min_matched_windows=3),
+))
+
+register_entry(CorpusEntry(
+    name="chaos/flip-bytes-segment",
+    app="chaos", backend="chaos",
+    description="Silent bit rot inside a flushed segment (seeded byte "
+                "flips, length unchanged): sha256 quarantines it, the "
+                "window over it degrades, the other three match clean",
+    build=_chaos_spool(FlipBytesInSegment(segment=1, n_flips=8)),
+    truth=_CHAOS_ST_TRUTH,
+    chaos=ChaosTruth(min_quarantined=1, min_degraded=1,
+                     min_matched_windows=3),
+))
+
+register_entry(CorpusEntry(
+    name="chaos/stall-producer",
+    app="chaos", backend="chaos",
+    description="Producer goes silent after 2 segments without closing: "
+                "the live consumer's StallDetector gives up in bounded "
+                "time, recovery seals 4 steps, window 0 matches clean",
+    build=_chaos_spool(StallProducer(segments=2)),
+    truth=_CHAOS_ST_TRUTH,
+    chaos=ChaosTruth(expect_stall=True, min_matched_windows=1),
+))
+
+# The checkpoint archetype has no verdict windows: the "comparison" is
+# the restored state itself (bit-equal to the fallback step's saved
+# arrays).  An empty verdict scores found=∅ -> precision 0.0 by
+# convention, so the floor is 0 and the truth plants no paths.
+register_entry(CorpusEntry(
+    name="chaos/corrupt-latest-checkpoint",
+    app="chaos", backend="chaos",
+    description="Newest checkpoint's payload damaged after save (seeded "
+                "byte flips): verification skips it and restore falls "
+                "back one step, bit-exact",
+    build=_chaos_ckpt(CorruptLatestCheckpoint(n_flips=16)),
+    truth=GroundTruth("dissimilarity", frozenset()),
+    min_precision=0.0,
+    chaos=ChaosTruth(min_quarantined=1, min_matched_windows=1,
+                     fallback_steps=1),
 ))

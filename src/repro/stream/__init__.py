@@ -1,20 +1,27 @@
 """Streaming trace collection + online windowed analysis.
 
-``spool``  — :class:`TraceSpool` (bounded-memory segment writer) and
-             :class:`SpooledTrace` (lazy reader / window reassembly /
-             byte-identical finalize).
+``spool``  — :class:`TraceSpool` (bounded-memory segment writer with
+             per-segment integrity records, crash recovery and
+             retention/compaction) and :class:`SpooledTrace` (lazy reader
+             / window reassembly / byte-identical finalize), plus
+             :class:`StallDetector` (producer heartbeat → bounded-backoff
+             "presumed dead" detection).
 ``online`` — :class:`OnlineAnalyzer` (per-window AutoAnalyzer verdicts as
-             the spool grows) and :class:`WindowVerdictLog` (onset
-             detection: the first window where a bottleneck verdict
-             persists).
+             the spool grows, degrading gracefully on bad windows via
+             :class:`DegradedWindow`) and :class:`WindowVerdictLog`
+             (onset detection: the first window where a bottleneck
+             verdict persists).
 
-See docs/streaming.md.
+See docs/streaming.md and docs/robustness.md.
 """
-from .online import (DISPARITY, DISSIMILARITY, OnlineAnalyzer, WindowVerdict,
-                     WindowVerdictLog)
-from .spool import (MANIFEST_NAME, SPOOL_FORMAT_VERSION, SpooledTrace,
-                    TraceSpool)
+from .online import (DISPARITY, DISSIMILARITY, DegradedWindow,
+                     OnlineAnalyzer, WindowVerdict, WindowVerdictLog)
+from .spool import (MANIFEST_NAME, QUARANTINE_DIR, SPOOL_FORMAT_VERSION,
+                    ProducerStalledError, SpooledTrace, SpoolGapError,
+                    StallDetector, TraceSpool, verify_segment)
 
-__all__ = ["DISPARITY", "DISSIMILARITY", "MANIFEST_NAME",
-           "OnlineAnalyzer", "SPOOL_FORMAT_VERSION", "SpooledTrace",
-           "TraceSpool", "WindowVerdict", "WindowVerdictLog"]
+__all__ = ["DISPARITY", "DISSIMILARITY", "DegradedWindow", "MANIFEST_NAME",
+           "OnlineAnalyzer", "ProducerStalledError", "QUARANTINE_DIR",
+           "SPOOL_FORMAT_VERSION", "SpoolGapError", "SpooledTrace",
+           "StallDetector", "TraceSpool", "WindowVerdict",
+           "WindowVerdictLog", "verify_segment"]

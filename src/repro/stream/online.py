@@ -26,12 +26,15 @@ put in the trace header (tests/test_stream.py pins this).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+import time
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+import numpy as np
 
 from repro.core import AutoAnalyzer, Verdict, tree_from_schema
-from repro.core.trace import RegionTrace
+from repro.core.trace import RegionTrace, TraceFormatError
 
-from .spool import SpooledTrace
+from .spool import SpooledTrace, SpoolGapError, StallDetector
 
 DISSIMILARITY = "dissimilarity"
 DISPARITY = "disparity"
@@ -45,6 +48,8 @@ class WindowVerdict:
     start: int
     stop: int
     verdict: Verdict
+
+    degraded = False     # class-level: see DegradedWindow
 
     @property
     def kinds(self) -> frozenset:
@@ -69,6 +74,43 @@ class WindowVerdict:
         return tuple(sorted(out))
 
 
+@dataclasses.dataclass(frozen=True)
+class DegradedWindow:
+    """A window the analyzer could not trust: corrupt/lost samples
+    (quarantined segment, compacted history) or non-finite values.
+
+    Structurally a :class:`WindowVerdict` stand-in — same
+    index/start/stop slot in the log, never flagged, no paths — so the
+    onset detector sees it as a run-breaker: a fault cannot be claimed
+    *persistent* across steps nobody observed, and detection resumes
+    cleanly after the gap.  ``reason``/``detail`` record why, so a
+    skipped window is visible in every consumer (``watch_train.py``
+    prints it; the chaos corpus asserts on it), never silently absent.
+    """
+
+    index: int
+    start: int
+    stop: int
+    reason: str
+    detail: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    degraded = True
+    verdict = None       # class-level: no analysis happened
+
+    @property
+    def kinds(self) -> frozenset:
+        return frozenset()
+
+    def flagged(self, kind: Optional[str] = None) -> bool:
+        return False
+
+    def paths(self, kind: Optional[str] = None) -> Tuple[str, ...]:
+        return ()
+
+
+AnyWindow = Union[WindowVerdict, DegradedWindow]
+
+
 class WindowVerdictLog:
     """Ordered per-window verdicts + the onset detector.
 
@@ -77,15 +119,24 @@ class WindowVerdictLog:
     one anomalous window is noise, ``persist`` consecutive ones are a
     fault with a start time.  A monotone fault (thermal drift) therefore
     reports the window its ramp first crossed the analyzer's threshold.
+
+    A :class:`DegradedWindow` occupies its slot but never flags, so it
+    breaks any in-progress persistence run — onset detection resumes
+    after the gap rather than asserting continuity across unobserved
+    steps.
     """
 
     def __init__(self, persist: int = 2):
         if persist < 1:
             raise ValueError(f"persist must be >= 1, got {persist}")
         self.persist = persist
-        self.windows: List[WindowVerdict] = []
+        self.windows: List[AnyWindow] = []
 
-    def append(self, wv: WindowVerdict) -> None:
+    @property
+    def degraded_windows(self) -> List[DegradedWindow]:
+        return [w for w in self.windows if w.degraded]
+
+    def append(self, wv: AnyWindow) -> None:
         if wv.index != len(self.windows):
             raise ValueError(f"window {wv.index} appended out of order "
                              f"(expected {len(self.windows)})")
@@ -176,28 +227,53 @@ class OnlineAnalyzer:
 
     def _analyze_window(self, trace: RegionTrace,
                         window: Tuple[int, int], start: int, stop: int,
-                        analyzer: AutoAnalyzer) -> WindowVerdict:
+                        analyzer: AutoAnalyzer) -> AnyWindow:
         """``window`` indexes into ``trace`` (which may be rebased to step
         0 when reassembled from a spool); ``start``/``stop`` are the
-        absolute run-step labels the log reports."""
-        res = analyzer.analyze_trace(trace, window=window)
-        wv = WindowVerdict(index=len(self.log.windows),
-                           start=start, stop=stop, verdict=res.verdict)
+        absolute run-step labels the log reports.
+
+        Degrades instead of crashing: non-finite samples or an analyzer
+        exception yield a :class:`DegradedWindow` so a single bad window
+        cannot take down a live watcher mid-run."""
+        idx = len(self.log.windows)
+        w0, w1 = window
+        bad = sorted(k for k, v in trace.data.items()
+                     if not np.isfinite(v[w0:w1]).all())
+        if bad:
+            wv: AnyWindow = DegradedWindow(
+                index=idx, start=start, stop=stop,
+                reason="non-finite samples", detail={"metrics": bad})
+        else:
+            try:
+                res = analyzer.analyze_trace(trace, window=window)
+            except Exception as e:
+                wv = DegradedWindow(
+                    index=idx, start=start, stop=stop,
+                    reason=f"analysis error: {type(e).__name__}",
+                    detail={"error": str(e)})
+            else:
+                wv = WindowVerdict(index=idx, start=start, stop=stop,
+                                   verdict=res.verdict)
         self.log.append(wv)
         return wv
 
     # -- consumption -------------------------------------------------------
-    def poll(self, spooled: SpooledTrace) -> List[WindowVerdict]:
+    def poll(self, spooled: SpooledTrace) -> List[AnyWindow]:
         """Analyze every window that has completed since the last poll.
 
         Reloads the manifest first, so a live tail picks up freshly
         flushed segments; a window is reassembled only from the segments
         it overlaps.  When the spool is complete, the trailing partial
-        window (if any) is analyzed as the final window."""
+        window (if any) is analyzed as the final window.
+
+        A window that cannot be reassembled — range lost to a quarantined
+        segment, pruned by compaction, or a segment that fails to parse —
+        is logged as a :class:`DegradedWindow` and consumption continues
+        with the next window."""
         spooled.reload()
         self._source = spooled
         analyzer = self._resolve_analyzer(spooled.schema, spooled.meta)
-        out: List[WindowVerdict] = []
+        out: List[AnyWindow] = []
         while True:
             start, stop = self._next_bounds()
             if stop <= spooled.n_steps:
@@ -206,10 +282,52 @@ class OnlineAnalyzer:
                 stop = spooled.n_steps         # trailing partial window
             else:
                 break
-            win = spooled.window(start, stop)
+            try:
+                win = spooled.window(start, stop)
+            except SpoolGapError as e:
+                wv: AnyWindow = DegradedWindow(
+                    index=len(self.log.windows), start=start, stop=stop,
+                    reason="window range lost",
+                    detail={"missing": [list(m) for m in e.missing]})
+                self.log.append(wv)
+                out.append(wv)
+                continue
+            except TraceFormatError as e:
+                wv = DegradedWindow(
+                    index=len(self.log.windows), start=start, stop=stop,
+                    reason="corrupt segment",
+                    detail={"path": e.path, "error": e.reason})
+                self.log.append(wv)
+                out.append(wv)
+                continue
             out.append(self._analyze_window(win, (0, win.n_steps),
                                             start, stop, analyzer))
         return out
+
+    def follow(self, spooled: SpooledTrace,
+               interval: float = 1.0,
+               max_stall: Optional[float] = None,
+               sleep_fn=time.sleep):
+        """Generator over a *live* spool: yields windows as they complete
+        and returns when the producer closes the spool.
+
+        With ``max_stall`` set, a :class:`StallDetector` bounds the wait —
+        polling backs off exponentially while nothing changes, and once
+        the producer's heartbeat (manifest mtime / step count) has been
+        silent for ``max_stall`` seconds, :class:`ProducerStalledError`
+        propagates: the producer is presumed dead and the consumer exits
+        instead of tailing forever."""
+        detector = (None if max_stall is None else
+                    StallDetector(max_stall, base_interval=interval))
+        while True:
+            for wv in self.poll(spooled):
+                yield wv
+            if spooled.complete:
+                return
+            delay = interval
+            if detector is not None:
+                delay = detector.observe(spooled)
+            sleep_fn(delay)
 
     def process_trace(self, trace: RegionTrace) -> WindowVerdictLog:
         """Run every window of an already-materialized trace (a finished

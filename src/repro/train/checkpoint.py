@@ -1,23 +1,55 @@
-"""Mesh-agnostic atomic checkpointing.
+"""Mesh-agnostic atomic checkpointing with verified restore.
 
 Arrays are gathered to host numpy and written as a flat npz keyed by tree
-path, plus a JSON manifest.  Writes are atomic (tmp dir + rename), so a
-crash mid-save never corrupts the latest checkpoint — the fault-tolerance
-layer restarts from the newest complete step.  Because leaves are stored
-unsharded-logical, a checkpoint saved under one mesh restores under any
-other (elastic re-mesh).
+path, plus a JSON manifest and an ``integrity.json`` sidecar (byte length
++ sha256 of every payload file).  The whole step dir is staged in a tmp
+dir and renamed into place, so a crash mid-save never corrupts the latest
+checkpoint — and because the sidecar is written *inside* the tmp dir
+before the rename, a step dir either carries a complete, self-consistent
+integrity record or does not exist.
+
+``restore(step=None)`` verifies before trusting: it walks steps newest
+first and restores the newest one whose sidecar checks out, so the
+fault-tolerance layer (``run_with_restarts`` / ``remesh``) survives a
+checkpoint corrupted mid-write by the very crash that triggered the
+restart.  Skipped steps are reported via ``warnings`` and recorded for
+the chaos harness by :func:`latest_verified_step`.  Because leaves are
+stored unsharded-logical, a checkpoint saved under one mesh restores
+under any other (elastic re-mesh).
+
+docs/robustness.md has the failure-mode matrix this module implements.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
 import tempfile
-from typing import Any, Dict, Optional, Tuple
+import warnings
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 import jax
+
+from repro.core.faultpoints import fault_point
+
+INTEGRITY_NAME = "integrity.json"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """No usable checkpoint: the requested (or every) step fails integrity
+    verification.  ``failures`` maps step -> reason."""
+
+    def __init__(self, ckpt_dir: str, failures: Dict[int, str]):
+        self.ckpt_dir = ckpt_dir
+        self.failures = dict(failures)
+        detail = "; ".join(f"step {s}: {r}"
+                           for s, r in sorted(failures.items()))
+        super().__init__(
+            f"{ckpt_dir}: no checkpoint passed integrity verification "
+            f"({detail or 'none present'})")
 
 
 def _path_str(path) -> str:
@@ -52,6 +84,16 @@ def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Dict[str, str]]:
     return arrays, dtypes
 
 
+def _file_digest(path: str) -> Tuple[str, int]:
+    h = hashlib.sha256()
+    n = 0
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+            n += len(block)
+    return h.hexdigest(), n
+
+
 def save(ckpt_dir: str, step: int, trees: Dict[str, Any],
          meta: Optional[Dict] = None, keep: int = 3) -> str:
     """trees: {"params": ..., "opt_state": ...}.  Returns the step dir."""
@@ -59,18 +101,36 @@ def save(ckpt_dir: str, step: int, trees: Dict[str, Any],
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
     tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
     try:
+        fault_point("ckpt.pre_write")
         all_dtypes: Dict[str, Dict[str, str]] = {}
         for name, tree in trees.items():
             arrays, dtypes = _flatten(tree)
             np.savez(os.path.join(tmp, f"{name}.npz"), **arrays)
             all_dtypes[name] = dtypes
+        fault_point("ckpt.arrays_written")
         manifest = {"step": int(step), "trees": sorted(trees),
                     "dtypes": all_dtypes, "meta": meta or {}}
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+        fault_point("ckpt.manifest_written")
+        integrity = {}
+        for fname in sorted(os.listdir(tmp)):
+            digest, nbytes = _file_digest(os.path.join(tmp, fname))
+            integrity[fname] = {"sha256": digest, "bytes": nbytes}
+        with open(os.path.join(tmp, INTEGRITY_NAME), "w") as f:
+            json.dump({"step": int(step), "files": integrity}, f)
+        fault_point("ckpt.sidecar_written")
         if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
+            # Never a delete-then-rename hole: the old step dir is moved
+            # aside first, so a crash between the two renames demotes the
+            # step (restore falls back) instead of losing old AND new.
+            trash = tempfile.mkdtemp(dir=ckpt_dir, prefix=".gc_")
+            os.rename(final, os.path.join(trash, "old"))
+            os.rename(tmp, final)
+            shutil.rmtree(trash, ignore_errors=True)
+        else:
+            os.rename(tmp, final)
+        fault_point("ckpt.renamed")
     except BaseException:
         shutil.rmtree(tmp, ignore_errors=True)
         raise
@@ -82,6 +142,12 @@ def _gc(ckpt_dir: str, keep: int) -> None:
     steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
     for d in steps[:-keep] if keep else []:
         shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+    # Residue of crashed saves: stale staging/trash dirs a hard kill left
+    # behind.  They are invisible to latest_step/restore (no step_ prefix)
+    # and reaped here, on the next successful save.
+    for d in os.listdir(ckpt_dir):
+        if d.startswith((".tmp_", ".gc_")):
+            shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
@@ -95,15 +161,88 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def verify_step(ckpt_dir: str, step: int) -> Optional[str]:
+    """Integrity-check one step dir against its sidecar.
+
+    Returns None when intact, else the failure reason.  A legacy step dir
+    without a sidecar (pre-integrity format) verifies by presence of its
+    manifest alone — absence of evidence of corruption, accepted for
+    back-compat."""
+    d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    if not os.path.isdir(d):
+        return "missing step dir"
+    if not os.path.exists(os.path.join(d, "manifest.json")):
+        return "missing manifest.json"
+    sidecar = os.path.join(d, INTEGRITY_NAME)
+    if not os.path.exists(sidecar):
+        return None          # legacy checkpoint: no integrity record
+    try:
+        with open(sidecar) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return f"unreadable integrity sidecar: {e}"
+    for fname, rec in sorted(doc.get("files", {}).items()):
+        path = os.path.join(d, fname)
+        if not os.path.exists(path):
+            return f"{fname}: missing"
+        size = os.path.getsize(path)
+        if size != rec["bytes"]:
+            return f"{fname}: length {size} != recorded {rec['bytes']}"
+        digest, _ = _file_digest(path)
+        if digest != rec["sha256"]:
+            return f"{fname}: sha256 mismatch"
+    return None
+
+
+def latest_verified_step(ckpt_dir: str
+                         ) -> Tuple[Optional[int], List[Dict[str, Any]]]:
+    """Newest step that passes :func:`verify_step`, plus the record of
+    newer steps that were skipped (``[{step, reason}, ...]`` — the
+    fallback trail the chaos harness asserts on)."""
+    if not os.path.isdir(ckpt_dir):
+        return None, []
+    steps = sorted((int(d[len("step_"):])
+                    for d in os.listdir(ckpt_dir) if d.startswith("step_")),
+                   reverse=True)
+    skipped: List[Dict[str, Any]] = []
+    for step in steps:
+        reason = verify_step(ckpt_dir, step)
+        if reason is None:
+            return step, skipped
+        skipped.append({"step": step, "reason": reason})
+    return None, skipped
+
+
 def restore(ckpt_dir: str, templates: Dict[str, Any],
             step: Optional[int] = None, shardings: Optional[Dict] = None
             ) -> Tuple[int, Dict[str, Any]]:
     """Restore trees shaped like ``templates``; apply per-tree ``shardings``
     (matching pytrees of NamedSharding) when given — this is the elastic
-    re-mesh path."""
-    step = step if step is not None else latest_step(ckpt_dir)
-    if step is None:
-        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    re-mesh path.
+
+    With ``step=None`` the newest *verified* checkpoint is restored:
+    steps failing integrity verification are skipped (warned about, and
+    reported by :func:`latest_verified_step`) so a crash that tore the
+    latest save falls back instead of failing the restart.  An explicitly
+    requested step that fails verification raises
+    :class:`CheckpointCorruptError` — the caller named a specific state
+    and must not silently get another."""
+    if step is not None:
+        reason = verify_step(ckpt_dir, step)
+        if reason is not None:
+            raise CheckpointCorruptError(ckpt_dir, {step: reason})
+    else:
+        if latest_step(ckpt_dir) is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+        step, skipped = latest_verified_step(ckpt_dir)
+        if step is None:
+            raise CheckpointCorruptError(
+                ckpt_dir, {s["step"]: s["reason"] for s in skipped})
+        if skipped:
+            warnings.warn(
+                f"{ckpt_dir}: fell back to verified step {step}; skipped "
+                + ", ".join(f"step {s['step']} ({s['reason']})"
+                            for s in skipped), RuntimeWarning)
     d = os.path.join(ckpt_dir, f"step_{step:010d}")
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)

@@ -3,7 +3,10 @@
 * :func:`run_with_restarts` — supervises a Trainer; on an exception it
   rebuilds from the newest complete checkpoint and continues, up to
   ``max_restarts`` (node-failure recovery; checkpoints are atomic so a
-  crash mid-save is harmless).
+  crash mid-save is harmless).  Restores are integrity-verified: a
+  checkpoint corrupted by the very crash that triggered the restart is
+  skipped and the newest *verified* step is used instead
+  (``checkpoint.restore``; failure-mode matrix in docs/robustness.md).
 * :func:`remesh` — restores a checkpoint under a *different* mesh
   (elastic scale-up/down): checkpoints store unsharded-logical arrays, so
   the restore simply applies the new shardings.
@@ -43,6 +46,9 @@ def run_with_restarts(make_trainer: Callable[[], Trainer], steps: int,
                 raise
             fail_at = None  # injected failure fires once
             trainer = make_trainer()
+            # maybe_resume survives a torn/corrupt latest checkpoint:
+            # restore falls back to the newest verified step, and when
+            # *nothing* verifies it warns and starts fresh.
             trainer.maybe_resume()
 
 

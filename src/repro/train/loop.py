@@ -229,6 +229,16 @@ class TrainerConfig:
     # every traced step; persisted online verdicts trigger actions
     # (remesh / expert rebalance / checkpoint reschedule).
     mitigate: Optional[Any] = None
+    # Trace-injection seam: called as trace_inject(trainer, step, trace)
+    # right after the instrumented step produces its RegionTrace and
+    # before anything consumes it (spool, monitor, mitigation policy).
+    # May return a replacement trace (or mutate in place and return
+    # None).  This is how infrastructure-level fault archetypes — e.g. a
+    # checkpoint-write stall conditioned on the trainer's *current*
+    # ckpt_every — are driven through the real training loop by the
+    # recovery/chaos corpus.
+    trace_inject: Optional[Callable[["Trainer", int, RegionTrace],
+                                    Optional[RegionTrace]]] = None
 
     def __post_init__(self) -> None:
         if self.trace_path or self.trace_iters or self.trace_spool_dir \
@@ -377,6 +387,10 @@ class Trainer:
                 data.append(batch)
         step_trace = self.runner.run_trace(self._shard_states, data)
         self._shard_states = self.runner.final_states
+        if self.tcfg.trace_inject is not None:
+            replaced = self.tcfg.trace_inject(self, step, step_trace)
+            if replaced is not None:
+                step_trace = replaced
         self._last_step_trace = step_trace
         if self.spool is not None:
             self.spool.append(step_trace)
@@ -458,7 +472,17 @@ class Trainer:
         if latest is None:
             return False
         templates = {"params": self.params, "opt_state": self.opt_state}
-        step, trees = ckpt_mod.restore(d, templates)
+        try:
+            # restore() verifies integrity and falls back to the newest
+            # *verified* step on its own (docs/robustness.md).
+            step, trees = ckpt_mod.restore(d, templates)
+        except ckpt_mod.CheckpointCorruptError as e:
+            # Every checkpoint is damaged: a fresh start beats a crash
+            # loop, but never silently — the failure list is warned.
+            import warnings
+            warnings.warn(f"resume abandoned, starting fresh: {e}",
+                          RuntimeWarning)
+            return False
         self.adopt_restore(step, trees)
         return True
 

@@ -40,7 +40,8 @@ import numpy as np
 
 from repro.core import HOST_BYTES, WALL_TIME, AutoAnalyzer
 from repro.core.trace import RegionTrace
-from repro.stream.online import WindowVerdict, WindowVerdictLog
+from repro.stream.online import (DegradedWindow, WindowVerdict,
+                                 WindowVerdictLog)
 
 from . import checkpoint as ckpt_mod
 from .fault_tolerance import remesh, run_with_restarts
@@ -164,8 +165,20 @@ class MitigationPolicy:
         win = (self._pending[0] if len(self._pending) == 1
                else RegionTrace.merge(self._pending))
         self._pending = []
-        res = self._analyzer_for(trainer.region_tree).analyze_trace(win)
         stop = trainer.step
+        bad = sorted(k for k, v in win.data.items()
+                     if not np.isfinite(v).all())
+        if bad:
+            # Corrupt samples must not drive a mitigation (or crash the
+            # trainer): log the gap and resume with the next window —
+            # same degradation contract as the OnlineAnalyzer.
+            self.log.append(DegradedWindow(
+                index=len(self.log.windows), start=stop - win.n_steps,
+                stop=stop, reason="non-finite samples",
+                detail={"metrics": bad}))
+            self.window_candidates.append(None)
+            return None
+        res = self._analyzer_for(trainer.region_tree).analyze_trace(win)
         wv = WindowVerdict(index=len(self.log.windows),
                            start=stop - win.n_steps, stop=stop,
                            verdict=res.verdict)
