@@ -2,11 +2,19 @@
 """Run the golden fault-injection corpus end-to-end and report scores.
 
     PYTHONPATH=src python scripts/run_corpus.py [--seed N] [--backend B]
+                                                [--jobs N]
                                                 [--list] [--entry NAME ...]
 
 Prints a per-entry precision/recall table and exits nonzero when any entry
 misses its ground-truth bottleneck paths or cause attributes — usable
 directly as a CI gate.
+
+``--jobs N`` fans the entries out over a process pool (spawn context —
+safe alongside JAX).  Workers receive entry *names* and return plain
+result rows, so nothing unpicklable crosses the process boundary, and
+the table is printed in deterministic entry order regardless of which
+worker finishes first: the output is byte-identical to a sequential run
+apart from the wall_s column.
 
 Recovery-backend entries (``--backend recovery``) run the closed
 mitigation loop end-to-end (docs/mitigation.md): live per-step verdicts
@@ -21,6 +29,12 @@ deterministic infrastructure faults into the pipeline itself; the
 recovered chaos run and a clean run of the same scenario (every
 comparable window must match bit-for-bit), and the detail line adds the
 quarantine/adoption/stall/fallback accounting.
+
+Fleet-backend entries (``--backend fleet``, docs/fleet.md) attack one
+tenant of an eight-run FleetIngest; the same ``chaos`` column then gates
+*isolation* — every unaffected run's windows must match a solo analysis
+of the same spool — and the detail line adds the shed/quarantined-run
+accounting.
 """
 from __future__ import annotations
 
@@ -29,15 +43,119 @@ import os
 import sys
 
 
+def run_one(name: str, seed: int, train_trace_dir=None,
+            train_spool_dir=None) -> dict:
+    """Run one corpus entry by name and reduce the result to a plain
+    row dict (the only thing that crosses the --jobs process boundary:
+    CorpusRunResult holds closures and collectors that do not pickle)."""
+    from repro.scenarios import run_entry_robust, select_entries
+    if train_spool_dir:
+        from repro.scenarios import corpus as corpus_mod
+        corpus_mod.TRAIN_SPOOL_BASE = train_spool_dir
+    entry = select_entries(names=[name])[0]
+    r = run_entry_robust(entry, seed=seed)
+    notes = []
+    if train_trace_dir and entry.backend == "train":
+        trace = r.collector.trainer.trace
+        path = os.path.join(train_trace_dir,
+                            name.replace("/", "-") + ".npz")
+        os.makedirs(train_trace_dir, exist_ok=True)
+        notes.append(f"saved trace artifact: {trace.save(path)}")
+    if train_spool_dir and entry.backend == "train":
+        # the kept run's spool (a retry spools separately)
+        notes.append(f"spool: {name} -> "
+                     f"{r.collector.trainer.tcfg.trace_spool_dir}")
+    o = r.chaos_outcome
+    rwant = entry.recovery
+    return {
+        "name": name,
+        "kind": entry.truth.kind,
+        "passed": r.passed,
+        "precision": r.precision,
+        "recall": r.recall,
+        "cause_recall": r.cause_recall,
+        "walls": list(r.attempt_walls),
+        "onset": (None if entry.expect_onset_window is None
+                  else [r.onset_window, entry.expect_onset_window]),
+        "recov": (None if rwant is None
+                  else [r.mitigation_window, rwant.mitigate_by_window]),
+        "recovery": (None if rwant is None else {
+            "got_kind": r.recovery_kind, "window": r.mitigation_window,
+            "clean_after": r.clean_after, "want_kind": rwant.kind,
+            "by_window": rwant.mitigate_by_window,
+            "clean_windows": rwant.clean_windows}),
+        "chaos": (None if o is None else {
+            "survived": o.survived, "quarantined": o.quarantined,
+            "adopted": o.adopted, "degraded": o.degraded,
+            "stalled": o.stalled, "shed": o.shed,
+            "matched": o.matched, "comparable": o.comparable,
+            "fallback_from": o.fallback_from,
+            "restored_step": o.restored_step}),
+        "chaos_failures": list(r.chaos_failures or ()),
+        "missed": sorted(r.missed),
+        "spurious": sorted(r.spurious),
+        "causes_wanted": sorted(entry.truth.cause_attributes),
+        "causes_found": sorted(r.causes_found),
+        "causes_global": sorted(r.verdict.cause_attributes),
+        "notes": notes,
+    }
+
+
+def _print_row(row: dict, wname: int) -> None:
+    status = "ok" if row["passed"] else "FAIL"
+    fmt = lambda gw: "-" if gw is None else f"{gw[0]}/{gw[1]}"
+    o = row["chaos"]
+    chaos = "-" if o is None else f"{o['matched']}/{o['comparable']}"
+    print(f"{row['name']:{wname}s} {row['kind']:13s} "
+          f"{row['precision']:6.2f} {row['recall']:6.2f} "
+          f"{row['cause_recall']:6.2f} {fmt(row['onset']):>7s} "
+          f"{fmt(row['recov']):>7s} {chaos:>7s} "
+          f"{sum(row['walls']):7.3f}  {status}")
+    pad = " " * wname
+    rec = row["recovery"]
+    if rec is not None:
+        print(f"{pad}   recovery: got {rec['got_kind']} at window "
+              f"{rec['window']}, clean tail {rec['clean_after']} "
+              f"(want {rec['want_kind']} by window {rec['by_window']}, "
+              f"clean >= {rec['clean_windows']})")
+    if o is not None:
+        fb = (f", fell back step {o['fallback_from']}->"
+              f"{o['restored_step']}"
+              if o["fallback_from"] is not None else "")
+        shed = f" shed={o['shed']}" if o["shed"] else ""
+        print(f"{pad}   chaos: survived={o['survived']} "
+              f"quarantined={o['quarantined']} adopted={o['adopted']} "
+              f"degraded={o['degraded']} stalled={o['stalled']}"
+              f"{shed}{fb}")
+        for msg in row["chaos_failures"]:
+            print(f"{pad}   chaos FAIL: {msg}")
+    if len(row["walls"]) > 1:
+        # a retried wall-clock entry: report every attempt, not just
+        # the one whose result was kept
+        print(f"{pad}   retried: attempt wall_s "
+              + ", ".join(f"{w:.3f}" for w in row["walls"]))
+    if row["missed"]:
+        print(f"{pad}   missed: {row['missed']}")
+    if not row["passed"] and row["spurious"]:
+        print(f"{pad}   spurious: {row['spurious']}")
+    want = row["causes_wanted"]
+    if want and not set(want) <= set(row["causes_found"]):
+        print(f"{pad}   causes wanted {want}, got {row['causes_found']} "
+              f"at the planted paths (globally: {row['causes_global']})")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend",
                     choices=("synthetic", "runtime", "train", "recovery",
-                             "chaos"),
+                             "chaos", "fleet"),
                     default=None, help="restrict to one backend")
     ap.add_argument("--entry", action="append", default=None,
                     help="run only these entries (repeatable)")
+    ap.add_argument("--jobs", type=int, default=1, metavar="N",
+                    help="run entries on an N-process pool (spawn "
+                         "context); output stays in entry order")
     ap.add_argument("--list", action="store_true",
                     help="list registered entries and exit")
     ap.add_argument("--train-trace-dir", default=None, metavar="DIR",
@@ -50,12 +168,11 @@ def main(argv=None) -> int:
                          "collection; each run's spool path is printed so "
                          "CI can replay/byte-compare it)")
     args = ap.parse_args(argv)
+    if args.jobs < 1:
+        print("--jobs must be >= 1", file=sys.stderr)
+        return 2
 
-    from repro.scenarios import run_entry_robust, select_entries
-    if args.train_spool_dir:
-        from repro.scenarios import corpus as corpus_mod
-        corpus_mod.TRAIN_SPOOL_BASE = args.train_spool_dir
-
+    from repro.scenarios import select_entries
     try:
         entries = select_entries(backend=args.backend, names=args.entry)
     except ValueError as e:  # unknown entry, or one excluded by --backend
@@ -67,79 +184,40 @@ def main(argv=None) -> int:
             print(f"{e.name:44s} [{e.backend:9s}] {e.truth.kind:13s} "
                   f"{e.description}")
         return 0
-
-    results = []
-    for e in entries:
-        r = run_entry_robust(e, seed=args.seed)
-        results.append((r, r.attempt_walls))
-        if args.train_trace_dir and e.backend == "train":
-            trace = r.collector.trainer.trace
-            path = os.path.join(args.train_trace_dir,
-                                e.name.replace("/", "-") + ".npz")
-            os.makedirs(args.train_trace_dir, exist_ok=True)
-            print(f"saved trace artifact: {trace.save(path)}")
-        if args.train_spool_dir and e.backend == "train":
-            # the kept run's spool (a retry spools separately)
-            print(f"spool: {e.name} -> "
-                  f"{r.collector.trainer.tcfg.trace_spool_dir}")
-    if not results:
+    if not entries:
         print("no entries selected", file=sys.stderr)
         return 2
-    wname = max(len(r.entry.name) for r, _ in results) + 2
+
+    names = [e.name for e in entries]
+    if args.jobs > 1 and len(names) > 1:
+        import multiprocessing as mp
+        from concurrent.futures import ProcessPoolExecutor
+        ctx = mp.get_context("spawn")   # fork is unsafe alongside JAX
+        with ProcessPoolExecutor(max_workers=min(args.jobs, len(names)),
+                                 mp_context=ctx) as pool:
+            futures = [pool.submit(run_one, n, args.seed,
+                                   args.train_trace_dir,
+                                   args.train_spool_dir) for n in names]
+            # collect in submit order: the table is deterministic no
+            # matter which worker finishes first
+            rows = [f.result() for f in futures]
+    else:
+        rows = [run_one(n, args.seed, args.train_trace_dir,
+                        args.train_spool_dir) for n in names]
+
+    for row in rows:
+        for note in row["notes"]:
+            print(note)
+    wname = max(len(n) for n in names) + 2
     print(f"{'entry':{wname}s} {'kind':13s} {'prec':>6s} {'recall':>6s} "
           f"{'causes':>6s} {'onset':>7s} {'recov':>7s} {'chaos':>7s} "
           f"{'wall_s':>7s}  status")
     print("-" * (wname + 76))
-    failures = 0
-    for r, walls in results:
-        status = "ok" if r.passed else "FAIL"
-        if not r.passed:
-            failures += 1
-        want = r.entry.expect_onset_window
-        onset = "-" if want is None else f"{r.onset_window}/{want}"
-        # recovery got/want: the window the first action fired at vs the
-        # entry's time-to-mitigate bound (details printed below)
-        rwant = r.entry.recovery
-        recov = "-" if rwant is None \
-            else f"{r.mitigation_window}/{rwant.mitigate_by_window}"
-        # chaos got/want: matched vs comparable clean-run windows (every
-        # comparable window must reproduce the clean verdict exactly)
-        o = r.chaos_outcome
-        chaos = "-" if o is None else f"{o.matched}/{o.comparable}"
-        print(f"{r.entry.name:{wname}s} {r.entry.truth.kind:13s} "
-              f"{r.precision:6.2f} {r.recall:6.2f} {r.cause_recall:6.2f} "
-              f"{onset:>7s} {recov:>7s} {chaos:>7s} {sum(walls):7.3f}  "
-              f"{status}")
-        if rwant is not None:
-            print(f"{'':{wname}s}   recovery: got {r.recovery_kind} at "
-                  f"window {r.mitigation_window}, clean tail "
-                  f"{r.clean_after} (want {rwant.kind} by window "
-                  f"{rwant.mitigate_by_window}, clean >= "
-                  f"{rwant.clean_windows})")
-        if o is not None:
-            fb = (f", fell back step {o.fallback_from}->{o.restored_step}"
-                  if o.fallback_from is not None else "")
-            print(f"{'':{wname}s}   chaos: survived={o.survived} "
-                  f"quarantined={o.quarantined} adopted={o.adopted} "
-                  f"degraded={o.degraded} stalled={o.stalled}{fb}")
-            for msg in (r.chaos_failures or ()):
-                print(f"{'':{wname}s}   chaos FAIL: {msg}")
-        if len(walls) > 1:
-            # a retried wall-clock entry: report every attempt, not just
-            # the one whose result was kept
-            print(f"{'':{wname}s}   retried: attempt wall_s "
-                  + ", ".join(f"{w:.3f}" for w in walls))
-        if r.missed:
-            print(f"{'':{wname}s}   missed: {sorted(r.missed)}")
-        if not r.passed and r.spurious:
-            print(f"{'':{wname}s}   spurious: {sorted(r.spurious)}")
-        want = r.entry.truth.cause_attributes
-        if want and not want <= r.causes_found:
-            print(f"{'':{wname}s}   causes wanted {sorted(want)}, "
-                  f"got {sorted(r.causes_found)} at the planted paths "
-                  f"(globally: {sorted(r.verdict.cause_attributes)})")
+    failures = sum(1 for row in rows if not row["passed"])
+    for row in rows:
+        _print_row(row, wname)
     print("-" * (wname + 76))
-    print(f"{len(results) - failures}/{len(results)} entries passed "
+    print(f"{len(rows) - failures}/{len(rows)} entries passed "
           f"(seed {args.seed})")
     return 1 if failures else 0
 

@@ -26,8 +26,12 @@ the script processes everything flushed so far and exits (nonzero if the
 spool is still incomplete, so CI can assert it saw a whole run).
 ``--follow --max-stall SEC`` bounds the wait: when the spool makes no
 progress for SEC seconds the producer is presumed dead and the script
-exits rather than tailing a corpse forever (exit code 4 below; recover
-the spool with ``TraceSpool.recover`` and re-analyze).
+exits rather than tailing a corpse forever (exit code 4 below; rerun
+with ``--recover`` to salvage and re-analyze).
+``--recover`` runs :meth:`TraceSpool.recover` before tailing — torn
+``.tmp`` residue is quarantined, a crash-orphaned trailing segment is
+adopted, and the quarantine/adopt/lost-range event log is printed —
+then analyzes the sealed manifest like any complete spool.
 ``--finalize PATH`` converts the complete spool into the classic
 single-``.npz`` artifact — byte-identical to the monolithic save of the
 same run.
@@ -81,6 +85,11 @@ def main(argv=None) -> int:
     ap.add_argument("--max-stall", type=float, default=None, metavar="SEC",
                     help="with --follow: exit 4 (producer presumed dead) "
                          "when the spool makes no progress for SEC seconds")
+    ap.add_argument("--recover", action="store_true",
+                    help="run TraceSpool.recover on the spool before "
+                         "tailing (salvage a crashed producer's residue: "
+                         "torn tmps quarantined, orphan segments adopted) "
+                         "and print the quarantine/adopt event log")
     ap.add_argument("--json", action="store_true",
                     help="emit one JSON document instead of text lines")
     ap.add_argument("--finalize", default=None, metavar="PATH",
@@ -95,7 +104,23 @@ def main(argv=None) -> int:
 
     from repro.stream import (MANIFEST_NAME, OnlineAnalyzer,
                               ProducerStalledError, SpooledTrace,
-                              StallDetector)
+                              StallDetector, TraceSpool)
+
+    if args.recover:
+        # salvage first, then tail the sealed manifest like any other
+        # complete spool; the event log says exactly what was kept
+        try:
+            event = TraceSpool.recover(args.spool)
+        except (ValueError, OSError) as e:
+            print(str(e), file=sys.stderr)
+            return 3
+        for q in event["quarantined"]:
+            print(f"recover: quarantined {q['file']} ({q['reason']})")
+        for a in event["adopted"]:
+            print(f"recover: adopted {a}")
+        for lo, hi in event["lost_ranges"]:
+            print(f"recover: lost steps [{lo}:{hi})")
+        print(f"recover: sealed at {event['n_steps']} steps")
 
     # A live run has no manifest until its first chunk flushes; --follow
     # waits for it rather than dying at startup — but a producer that

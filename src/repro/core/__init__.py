@@ -25,7 +25,7 @@ from .metrics import (BYTES, COMM_BYTES, COMM_TIME, CPU_TIME,
                       DECISION_ATTRIBUTES, FLOPS, HBM_INTENSITY, HOST_BYTES,
                       RAW_METRICS, VMEM_PRESSURE, WALL_TIME, RegionMetrics)
 from .regions import CodeRegion, RegionTree, st_region_tree
-from .report import render
+from .report import render, verdict_fingerprint
 from .roughset import (DecisionTable, format_matrix, paper_table2,
                        paper_table3, paper_table4)
 from .search import (DisparityReport, DissimilarityReport,

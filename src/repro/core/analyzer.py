@@ -77,6 +77,15 @@ class Verdict:
                                 for p, a in self.per_path_causes],
         }
 
+    def fingerprint(self) -> str:
+        """Stable cross-run dedup key — a digest of :meth:`doc`, so
+        fingerprint equality is exactly canonical-doc equality (see
+        :func:`repro.core.report.verdict_fingerprint`, where the format
+        is defined).  The fleet verdict index and the chaos corpus gates
+        both dedupe by this key."""
+        from .report import verdict_fingerprint
+        return verdict_fingerprint(self)
+
 
 @dataclasses.dataclass
 class AnalysisResult:

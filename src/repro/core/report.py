@@ -1,12 +1,46 @@
-"""Human-readable analysis reports (paper Fig. 9 / Fig. 12 output style)."""
+"""Human-readable analysis reports (paper Fig. 9 / Fig. 12 output style),
+plus the canonical cross-run verdict fingerprint."""
 from __future__ import annotations
 
+import hashlib
+import json
 from typing import List
 
-from .analyzer import ATTRIBUTE_MEANING, AnalysisResult
+from .analyzer import ATTRIBUTE_MEANING, AnalysisResult, Verdict
 from .clustering import SEVERITY_NAMES
 from .regions import RegionTree
 from .search import severity_banding
+
+
+def verdict_fingerprint(verdict: Verdict) -> str:
+    """Stable cross-run dedup key for a verdict.
+
+    The fingerprint digests the verdict's *canonical* form
+    (:meth:`Verdict.doc` — bottleneck kind, located region paths, cluster
+    shape of the located CCR/CCCR chain, and the severity-banded cause
+    attributes, all sorted), so two analyses that located the same
+    bottlenecks for the same reasons — in different runs, on different
+    machines — fingerprint identically, and *any* difference in the
+    canonical doc changes the key.  Equality of fingerprints is therefore
+    the same predicate the bit-identity gates check with ``doc()``
+    equality, in a form short enough to index: the fleet
+    :class:`~repro.fleet.VerdictIndex` deduplicates recurring bottleneck
+    signatures into "seen in N runs" reports by this key, and the
+    chaos/onset corpus comparisons match windows by the very same key
+    (scenarios/chaos.py), so the index and the gates can never disagree
+    about what "the same verdict" means.
+
+    Format: ``<kind>:<16 hex chars>`` where kind is ``none`` / ``dissim``
+    / ``disp`` / ``both`` — human-skimmable in reports, unique by digest.
+    """
+    doc = verdict.doc()
+    blob = json.dumps(doc, sort_keys=True, separators=(",", ":"))
+    digest = hashlib.sha256(blob.encode("utf-8")).hexdigest()[:16]
+    dis = bool(doc["dissimilar"] or doc["dissimilarity_paths"])
+    disp = bool(doc["disparity_paths"])
+    kind = {(False, False): "none", (True, False): "dissim",
+            (False, True): "disp", (True, True): "both"}[(dis, disp)]
+    return f"{kind}:{digest}"
 
 
 def render(tree: RegionTree, result: AnalysisResult) -> str:

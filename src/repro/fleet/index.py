@@ -1,0 +1,251 @@
+"""VerdictIndex: a crash-safe cross-run index of bottleneck signatures.
+
+The similarity-analysis companion work (arXiv:0906.1326) frames recurring
+dissimilarity signatures as the reusable unit of diagnosis: the same
+bottleneck showing up across many runs of a fleet is one fault, not N.
+This module gives that idea a durable home.  Every flagged window verdict
+any run produces is fingerprinted (:meth:`repro.core.Verdict.fingerprint`
+— kind, located region paths, cause attributes, digested from the
+canonical ``doc()`` form) and recorded; the index deduplicates recurring
+signatures into "seen in N runs" reports, so a fleet operator reads *one*
+line per distinct fault, with the run count as its blast radius.
+
+Durability model (the same two-tier shape as the trace spool, and gated
+by the same kill-schedule sweep through :mod:`repro.core.faultpoints`):
+
+* an **append-only journal** (``journal.jsonl``): one JSON record per
+  line, written + flushed before the in-memory state advances.  The
+  journal is the source of truth — every aggregate is a pure function of
+  its intact lines, so replay after *any* crash rebuilds exact counts.
+* an **atomic snapshot** (``snapshot.json``): the aggregated state,
+  rewritten tmp+rename every ``snapshot_every`` records so recovery does
+  not have to replay an unbounded journal.  A snapshot is an
+  optimization, never a requirement: recovery loads the newest valid
+  snapshot (if any) and replays the journal tail past it.
+
+Crash safety specifics:
+
+* a torn final journal line (killed mid-append) is detected by JSON
+  parse failure and set aside as ``recovered_event["torn_tail"]`` — the
+  record was never acknowledged, so dropping it is old-state semantics,
+  and the truncated bytes are preserved in the event, never silently
+  lost;
+* a torn snapshot tmp is ignored (the rename never happened — old-state);
+* records are **idempotent** per ``(run, fingerprint, start, stop)``:
+  replaying a record that already made it into the journal (a caller
+  that crashed between append and its own bookkeeping re-sends) changes
+  nothing, so "seen in N runs" counts are exact under at-least-once
+  delivery.
+
+Fault points (armed by tests/test_fleet.py's kill sweep):
+``vindex.journal.pre_append``, ``vindex.journal.appended``,
+``vindex.snapshot.written``, ``vindex.snapshot.renamed``.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core import Verdict
+from repro.core.faultpoints import fault_point
+
+INDEX_FORMAT_VERSION = 1
+JOURNAL_NAME = "journal.jsonl"
+SNAPSHOT_NAME = "snapshot.json"
+
+
+class VerdictIndex:
+    """Cross-run verdict dedup index over one directory.
+
+    Opening a directory *is* recovery: the newest valid snapshot is
+    loaded, the journal tail is replayed, and a torn trailing line is
+    set aside — the constructor never raises on crash residue, only on a
+    directory that holds a foreign/newer-format index.
+    """
+
+    def __init__(self, directory: str, snapshot_every: int = 16):
+        if snapshot_every < 1:
+            raise ValueError(
+                f"snapshot_every must be >= 1, got {snapshot_every}")
+        os.makedirs(directory, exist_ok=True)
+        self.directory = directory
+        self.snapshot_every = snapshot_every
+        self._journal_path = os.path.join(directory, JOURNAL_NAME)
+        self._snapshot_path = os.path.join(directory, SNAPSHOT_NAME)
+        # fingerprint -> {"kinds", "paths", "runs": {run: n_windows},
+        #                 "windows": total recorded windows}
+        self._by_fp: Dict[str, Dict[str, Any]] = {}
+        self._keys: set = set()      # (run, fp, start, stop) idempotence
+        self._applied = 0            # journal records folded into state
+        self._since_snapshot = 0
+        self.recovered_event: Optional[Dict[str, Any]] = None
+        self._recover()
+
+    # -- recovery ----------------------------------------------------------
+    def _load_snapshot(self) -> int:
+        """Apply the snapshot if present and valid; returns the journal
+        record count it covers (0 when absent/invalid)."""
+        try:
+            with open(self._snapshot_path) as f:
+                doc = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return 0
+        if doc.get("format") != "repro.verdict_index":
+            raise ValueError(f"{self._snapshot_path}: not a verdict-index "
+                             f"snapshot")
+        if doc.get("version", 0) > INDEX_FORMAT_VERSION:
+            raise ValueError(
+                f"{self._snapshot_path}: index version {doc['version']} "
+                f"is newer than supported {INDEX_FORMAT_VERSION}")
+        for fp, agg in doc["by_fingerprint"].items():
+            self._by_fp[fp] = {
+                "kinds": list(agg["kinds"]), "paths": list(agg["paths"]),
+                "runs": dict(agg["runs"]), "windows": int(agg["windows"]),
+            }
+        self._keys = {tuple(k) for k in doc["keys"]}
+        return int(doc["applied"])
+
+    def _recover(self) -> None:
+        applied = self._load_snapshot()
+        event: Dict[str, Any] = {"snapshot_applied": applied,
+                                 "replayed": 0, "torn_tail": None}
+        replayed = 0
+        if os.path.exists(self._journal_path):
+            with open(self._journal_path) as f:
+                lines = f.readlines()
+            for i, line in enumerate(lines):
+                if not line.strip():
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    if i == len(lines) - 1:
+                        # killed mid-append: unacknowledged record —
+                        # old-state semantics, preserved in the event
+                        event["torn_tail"] = line
+                        break
+                    raise ValueError(
+                        f"{self._journal_path}: corrupt journal record "
+                        f"{i} (not the tail — the index cannot trust "
+                        f"anything after it)")
+                replayed += 1
+                if replayed <= applied:
+                    continue            # already folded into the snapshot
+                self._fold(rec)
+        self._applied = max(applied, replayed)
+        event["replayed"] = max(0, replayed - applied)
+        self.recovered_event = event
+
+    # -- state -------------------------------------------------------------
+    def _fold(self, rec: Dict[str, Any]) -> bool:
+        """Apply one journal record to the aggregate; False if it was a
+        duplicate (idempotent replay)."""
+        key = (rec["run"], rec["fp"], int(rec["start"]), int(rec["stop"]))
+        if key in self._keys:
+            return False
+        self._keys.add(key)
+        agg = self._by_fp.setdefault(
+            rec["fp"], {"kinds": list(rec["kinds"]),
+                        "paths": list(rec["paths"]), "runs": {},
+                        "windows": 0})
+        agg["runs"][rec["run"]] = agg["runs"].get(rec["run"], 0) + 1
+        agg["windows"] += 1
+        return True
+
+    def record(self, run: str, verdict: Verdict, start: int,
+               stop: int) -> Dict[str, Any]:
+        """Journal one flagged window verdict of ``run`` over steps
+        ``[start, stop)`` and fold it into the aggregate.  Idempotent:
+        re-recording the same (run, fingerprint, window) is a no-op after
+        the journal append — exact counts under at-least-once delivery.
+        Returns the journal record."""
+        fp = verdict.fingerprint()
+        kinds = []
+        if verdict.dissimilar or verdict.dissimilarity_paths:
+            kinds.append("dissimilarity")
+        if verdict.disparity_paths:
+            kinds.append("disparity")
+        paths = sorted(set(verdict.dissimilarity_paths)
+                       | set(verdict.disparity_paths))
+        rec = {"run": run, "fp": fp, "start": int(start), "stop": int(stop),
+               "kinds": kinds, "paths": paths}
+        fault_point("vindex.journal.pre_append")
+        with open(self._journal_path, "a") as f:
+            f.write(json.dumps(rec, sort_keys=True,
+                               separators=(",", ":")) + "\n")
+            f.flush()
+        fault_point("vindex.journal.appended")
+        self._applied += 1
+        self._fold(rec)
+        # count journal records, not just unique folds: a duplicate
+        # advances `applied` too, and the snapshot must keep covering it
+        # so reopening replays a bounded (eventually empty) tail
+        self._since_snapshot += 1
+        if self._since_snapshot >= self.snapshot_every:
+            self.snapshot()
+        return rec
+
+    # -- snapshot ----------------------------------------------------------
+    def snapshot(self) -> str:
+        """Atomically rewrite the snapshot to cover every applied record
+        (tmp + rename — a concurrent reader, or a crash, sees the old or
+        the new snapshot, never a torn one)."""
+        doc = {
+            "format": "repro.verdict_index",
+            "version": INDEX_FORMAT_VERSION,
+            "applied": self._applied,
+            "by_fingerprint": {
+                fp: {"kinds": agg["kinds"], "paths": agg["paths"],
+                     "runs": dict(sorted(agg["runs"].items())),
+                     "windows": agg["windows"]}
+                for fp, agg in sorted(self._by_fp.items())},
+            "keys": sorted(list(k) for k in self._keys),
+        }
+        tmp = self._snapshot_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+            f.write("\n")
+        fault_point("vindex.snapshot.written")
+        os.replace(tmp, self._snapshot_path)
+        fault_point("vindex.snapshot.renamed")
+        self._since_snapshot = 0
+        return self._snapshot_path
+
+    def close(self) -> None:
+        """Final snapshot, so a reopened index replays no journal tail."""
+        if self._since_snapshot or not os.path.exists(self._snapshot_path):
+            self.snapshot()
+
+    # -- queries -----------------------------------------------------------
+    @property
+    def n_records(self) -> int:
+        """Journal records applied (duplicates included)."""
+        return self._applied
+
+    @property
+    def fingerprints(self) -> List[str]:
+        return sorted(self._by_fp)
+
+    def seen_in(self, fingerprint: str) -> int:
+        """Distinct runs this signature was recorded in."""
+        agg = self._by_fp.get(fingerprint)
+        return 0 if agg is None else len(agg["runs"])
+
+    def report(self) -> List[Dict[str, Any]]:
+        """The dedup report, one row per distinct signature, widest blast
+        radius first: ``{fingerprint, kinds, paths, n_runs, runs,
+        n_windows}`` — "seen in N runs" with the evidence attached."""
+        rows = []
+        for fp, agg in self._by_fp.items():
+            rows.append({
+                "fingerprint": fp,
+                "kinds": list(agg["kinds"]),
+                "paths": list(agg["paths"]),
+                "n_runs": len(agg["runs"]),
+                "runs": dict(sorted(agg["runs"].items())),
+                "n_windows": agg["windows"],
+            })
+        rows.sort(key=lambda r: (-r["n_runs"], -r["n_windows"],
+                                 r["fingerprint"]))
+        return rows

@@ -30,6 +30,22 @@ Archetypes
 ``FlipBytesInSegment``     silent bit rot inside a flushed segment
 ``CorruptLatestCheckpoint``the newest checkpoint's payload is damaged
                            (restore must fall back to a verified step)
+
+Fleet archetypes (``repro.fleet``, ``run_corpus.py --backend fleet``) —
+the fault lands on one (or two) of many concurrent runs and the contract
+widens to *isolation*: every unaffected run's per-window verdicts must be
+bit-identical to a solo tail of the same spool, while the affected runs
+degrade or quarantine with structured events:
+
+``FleetConcurrentKill``    two producers die mid-flush at different
+                           seams; stall detection + spool recovery drain
+                           their salvageable tails, siblings unperturbed
+``FleetTenantCorruption``  one tenant's segments rot in two waves; the
+                           first wave degrades windows, the second trips
+                           the circuit breaker and quarantines the run
+``FleetAnalysisLagFlood``  one run produces faster than the shared
+                           worker pool drains; its bounded queue sheds
+                           oldest-first, siblings never shed
 """
 from __future__ import annotations
 
@@ -43,6 +59,7 @@ import numpy as np
 from repro.core import Verdict
 from repro.core.faultpoints import InjectedCrash, armed
 from repro.core.trace import RegionTrace
+from repro.fleet import FleetConfig, FleetIngest, VerdictIndex
 from repro.stream import (OnlineAnalyzer, ProducerStalledError, SpooledTrace,
                           TraceSpool)
 from repro.train import checkpoint as ckpt_mod
@@ -97,6 +114,59 @@ class CorruptLatestCheckpoint:
     n_flips: int = 16
 
 
+@dataclasses.dataclass(frozen=True)
+class FleetConcurrentKill:
+    """Two of the fleet's producers die concurrently while flushing
+    segment ``kill_segment``, each at its own seam: the ``written``
+    victim leaves a torn ``.tmp`` (quarantined), the ``renamed`` victim
+    a fully-written orphan (adopted).  Both stall out, recover, and
+    drain their salvaged tails; the other runs must not notice."""
+
+    victims: Tuple[Tuple[int, str], ...] = (
+        (2, "spool.segment.written"), (5, "spool.segment.renamed"))
+    kill_segment: int = 5
+
+    @property
+    def victim_runs(self) -> Tuple[int, ...]:
+        return tuple(r for r, _ in self.victims)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetTenantCorruption:
+    """One tenant's flushed segments rot in two waves.  Wave one (one
+    bad segment mid-spool) stays under the circuit-breaker threshold:
+    the window over it degrades, the rest analyze.  Wave two (two more
+    bad segments) trips the breaker: the run is quarantined, its queue
+    drained as degraded — and not one byte of it may leak into a
+    sibling's verdicts."""
+
+    victim: int = 3
+    n_flips: int = 8
+    wave1_segment: int = 2          # corrupted after the first 4 flush
+    wave2_segments: Tuple[int, ...] = (5, 6)
+
+    @property
+    def victim_runs(self) -> Tuple[int, ...]:
+        return (self.victim,)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetAnalysisLagFlood:
+    """The last run produces ``flood_steps`` steps at 3x the siblings'
+    rate against a deliberately tight service budget: its bounded queue
+    overflows and sheds oldest-first (structured :class:`ShedEvent` +
+    ``DegradedWindow`` — degrade, never fabricate), while every sibling
+    is drained in time and stays shed-free and bit-identical."""
+
+    flood_steps: int = 48
+    queue_windows: int = 2
+    max_workers: int = 4
+
+    @property
+    def victim_runs(self) -> Tuple[int, ...]:
+        return ()                   # resolved by the collector (last run)
+
+
 # -- ground truth ---------------------------------------------------------
 
 
@@ -114,6 +184,7 @@ class ChaosTruth:
     min_matched_windows: int = 1
     expect_adopted: int = 0       # orphan segments recovery must adopt
     expect_stall: bool = False    # consumer must detect producer death
+    min_shed: int = 0             # fleet: backpressure must shed >= this
     fallback_steps: int = 0       # ckpt: restored == corrupted - this
 
     def check(self, outcome: "ChaosOutcome") -> List[str]:
@@ -131,6 +202,8 @@ class ChaosTruth:
         if outcome.stalled != self.expect_stall:
             bad.append(f"stall detected={outcome.stalled}, "
                        f"expected {self.expect_stall}")
+        if outcome.shed < self.min_shed:
+            bad.append(f"shed {outcome.shed} < {self.min_shed}")
         if outcome.comparable < self.min_matched_windows:
             bad.append(f"only {outcome.comparable} comparable windows "
                        f"(need {self.min_matched_windows})")
@@ -158,6 +231,7 @@ class ChaosOutcome:
     adopted: int = 0
     degraded: int = 0
     stalled: bool = False
+    shed: int = 0                       # fleet: backpressure drops
     matched: int = 0                    # same-bounds windows, verdict ==
     comparable: int = 0                 # same-bounds windows compared
     mismatched: List[int] = dataclasses.field(default_factory=list)
@@ -300,7 +374,9 @@ class SpoolChaosCollector:
             if ref is None:
                 continue
             comparable += 1
-            if w.verdict.doc() == ref.verdict.doc():
+            # fingerprint equality is doc() equality (sha256 of the
+            # canonical form) — the bit-identity gate, one line each
+            if w.verdict.fingerprint() == ref.verdict.fingerprint():
                 matched += 1
             else:
                 mismatched.append(w.index)
@@ -315,6 +391,203 @@ class SpoolChaosCollector:
                     "salvaged_steps": event["n_steps"],
                     "chaos_windows": len(chaos_windows),
                     "clean_windows": len(clean_windows)})
+
+
+# -- fleet pipeline -------------------------------------------------------
+
+
+def _corrupt_segment(directory: str, segment: int, archetype,
+                     rng: np.random.Generator) -> None:
+    _corrupt_file(os.path.join(directory, f"segment-{segment:05d}.npz"),
+                  archetype, rng)
+
+
+class FleetChaosCollector:
+    """Run one fleet archetype against a real :class:`FleetIngest` over
+    ``n_runs`` concurrent spools and score the *isolation* contract.
+
+    Every run replays the same planted scenario with a distinct seed
+    (``make_trace(run, n_steps)``), produced through real TraceSpool
+    writers — the victims under the archetype's interference, interleaved
+    with the fleet's cooperative ticks on a fake clock (one second per
+    tick; nothing here reads the wall clock, so seeds {0, 1, 7} replay
+    exactly).  After the fleet drains to idle, each unaffected run's
+    per-window verdicts are compared against a fresh *solo*
+    :class:`OnlineAnalyzer` poll of the same spool: every window must be
+    present and fingerprint-identical — one corrupt/dead/flooding tenant
+    must not perturb a sibling by a single bit.  The affected runs are
+    scored on the degrade path instead: recovery, quarantine, and shed
+    accounting from the supervisors' structured events."""
+
+    def __init__(self, tree, make_trace: Callable[[int, int], RegionTrace],
+                 archetype, seed: int, n_runs: int = 8, n_steps: int = 16,
+                 chunk_steps: int = 2, window_steps: int = 4,
+                 persist: int = 2,
+                 analyzer_kw: Tuple[Tuple[str, Any], ...] = ()):
+        if n_runs < 8:
+            raise ValueError(f"fleet isolation gate needs >= 8 runs, "
+                             f"got {n_runs}")
+        self.tree = tree
+        self.make_trace = make_trace
+        self.archetype = archetype
+        self.seed = seed
+        self.n_runs = n_runs
+        self.n_steps = n_steps
+        self.chunk_steps = chunk_steps
+        self.window_steps = window_steps
+        self.persist = persist
+        self.analyzer_kw = analyzer_kw
+
+    def _config(self) -> FleetConfig:
+        arch = self.archetype
+        kw = dict(window_steps=self.window_steps, persist=self.persist,
+                  analyzer_kw=tuple(self.analyzer_kw))
+        if isinstance(arch, FleetConcurrentKill):
+            # dead producers must be noticed: 3 fake-clock seconds
+            return FleetConfig(max_stall=3.0, **kw)
+        if isinstance(arch, FleetAnalysisLagFlood):
+            return FleetConfig(queue_windows=arch.queue_windows,
+                               max_workers=arch.max_workers, **kw)
+        return FleetConfig(**kw)
+
+    def run_chaos(self) -> ChaosOutcome:
+        arch = self.archetype
+        rng = np.random.default_rng(self.seed * 9173 + 47)
+        clock = [0.0]
+        flood = (self.n_runs - 1
+                 if isinstance(arch, FleetAnalysisLagFlood) else None)
+        victims = set(arch.victim_runs) | (
+            set() if flood is None else {flood})
+        with tempfile.TemporaryDirectory(prefix="repro-fleet-") as base:
+            dirs = [os.path.join(base, f"run-{r}")
+                    for r in range(self.n_runs)]
+            traces = [self.make_trace(
+                r, arch.flood_steps if r == flood else self.n_steps)
+                for r in range(self.n_runs)]
+            index = VerdictIndex(os.path.join(base, "index"))
+            fleet = FleetIngest(self._config(), index=index,
+                                time_fn=lambda: clock[0])
+            for r, d in enumerate(dirs):
+                fleet.add_run(f"run-{r}", d)
+
+            def tick(n: int = 1) -> None:
+                for _ in range(n):
+                    clock[0] += 1.0
+                    fleet.tick()
+
+            try:
+                if isinstance(arch, FleetConcurrentKill):
+                    # every spool is on disk before the fleet tails them;
+                    # the victims' producers died mid-flush and the torn
+                    # residue waits for stall-driven recovery
+                    kill = dict(arch.victims)
+                    for r in range(self.n_runs):
+                        if r in kill:
+                            with armed(kill[r],
+                                       nth=arch.kill_segment + 1):
+                                try:
+                                    _produce_spool(traces[r], dirs[r],
+                                                   self.chunk_steps)
+                                except InjectedCrash:
+                                    pass
+                        else:
+                            _produce_spool(traces[r], dirs[r],
+                                           self.chunk_steps)
+                elif isinstance(arch, FleetTenantCorruption):
+                    # wave one mid-production (degrades a window), wave
+                    # two after close (trips the circuit breaker)
+                    spools = [TraceSpool(d, chunk_steps=self.chunk_steps,
+                                         meta=dict(traces[r].meta))
+                              for r, d in enumerate(dirs)]
+                    half = self.n_steps // 2
+                    for s in range(half):
+                        for r in range(self.n_runs):
+                            spools[r].append(traces[r].window(s, s + 1))
+                    _corrupt_segment(dirs[arch.victim],
+                                     arch.wave1_segment, arch, rng)
+                    tick(5)
+                    for s in range(half, self.n_steps):
+                        for r in range(self.n_runs):
+                            spools[r].append(traces[r].window(s, s + 1))
+                    for r in range(self.n_runs):
+                        spools[r].close(meta=dict(traces[r].meta))
+                    for seg in arch.wave2_segments:
+                        _corrupt_segment(dirs[arch.victim], seg, arch,
+                                         rng)
+                else:   # FleetAnalysisLagFlood
+                    # the flood run appends 3x the siblings' rate while
+                    # the fleet ticks against a tight worker budget
+                    spools = [TraceSpool(d, chunk_steps=self.chunk_steps,
+                                         meta=dict(traces[r].meta))
+                              for r, d in enumerate(dirs)]
+                    rounds = self.n_steps // self.chunk_steps
+                    flood_per = arch.flood_steps // rounds
+                    done_n = [0] * self.n_runs
+                    for _ in range(rounds):
+                        for r in range(self.n_runs):
+                            per = (flood_per if r == flood
+                                   else self.chunk_steps)
+                            for s in range(done_n[r], done_n[r] + per):
+                                spools[r].append(traces[r].window(s, s + 1))
+                            done_n[r] += per
+                        tick()
+                    for r in range(self.n_runs):
+                        spools[r].close(meta=dict(traces[r].meta))
+                for _ in range(400):
+                    if fleet.done:
+                        break
+                    tick()
+                index.close()
+            except Exception as e:  # any escape = isolation did NOT hold
+                return ChaosOutcome(
+                    survived=False, error=f"{type(e).__name__}: {e}")
+
+            # -- score: unaffected runs vs solo, bit for bit ------------
+            matched, comparable, mismatched = 0, 0, []
+            flagged_verdict = None
+            for r in sorted(set(range(self.n_runs)) - victims):
+                sup = fleet.runs[f"run-{r}"]
+                solo = OnlineAnalyzer(
+                    tree=self.tree, window_steps=self.window_steps,
+                    persist=self.persist,
+                    analyzer_kw=dict(self.analyzer_kw))
+                by_bounds = {(w.start, w.stop): w
+                             for w in solo.poll(SpooledTrace(dirs[r]))
+                             if not w.degraded}
+                for w in sup.windows:
+                    if w.degraded:
+                        continue
+                    if flagged_verdict is None and w.flagged():
+                        flagged_verdict = w.verdict
+                    ref = by_bounds.get((w.start, w.stop))
+                    if ref is None:
+                        continue
+                    comparable += 1
+                    if w.verdict.fingerprint() == ref.verdict.fingerprint():
+                        matched += 1
+                    else:
+                        mismatched.append(w.index)
+
+            sups = list(fleet.runs.values())
+            events = [e for s in sups for e in s.events]
+            return ChaosOutcome(
+                survived=fleet.done,
+                error=None if fleet.done else "fleet never drained",
+                verdict=flagged_verdict or EMPTY_VERDICT,
+                quarantined=sum(1 for s in sups
+                                if s.state == "quarantined"),
+                adopted=sum(len(e.recovery.get("adopted", []))
+                            for e in events if e.kind == "recover"),
+                degraded=sum(s.degraded for s in sups),
+                stalled=any(e.kind == "stall" for e in events),
+                shed=sum(s.shed for s in sups),
+                matched=matched, comparable=comparable,
+                mismatched=mismatched,
+                detail={"status": fleet.status(),
+                        "index_report": index.report(),
+                        "unaffected": sorted(
+                            set(range(self.n_runs)) - victims),
+                        "ticks": fleet.ticks})
 
 
 # -- checkpoint pipeline --------------------------------------------------

@@ -52,7 +52,9 @@ from repro.stream import OnlineAnalyzer
 
 from . import faults as F
 from .chaos import (ChaosTruth, CheckpointChaosCollector,
-                    CorruptLatestCheckpoint, FlipBytesInSegment,
+                    CorruptLatestCheckpoint, FleetAnalysisLagFlood,
+                    FleetChaosCollector, FleetConcurrentKill,
+                    FleetTenantCorruption, FlipBytesInSegment,
                     KillProducerMidChunk, SpoolChaosCollector,
                     StallProducer, TruncateSegment)
 
@@ -548,6 +550,29 @@ def _chaos_ckpt(archetype):
     return build
 
 
+def _fleet_spool(archetype, n_runs: int = 8, n_steps: int = 16,
+                 chunk_steps: int = 2, window_steps: int = 4):
+    """Builder for fleet chaos entries: ``n_runs`` concurrent copies of
+    the ST compute-straggler scenario (distinct per-run seeds, same
+    planted fault) tailed by one FleetIngest while the archetype attacks
+    the victim run(s)."""
+    def build(seed: int):
+        tree, behaviors = baseline_st()
+
+        def make_trace(run: int, steps: int):
+            inner = FaultedSyntheticCollector(
+                tree, behaviors,
+                (F.ComputeStraggler("ST/cr5", procs=(6,), factor=5.0),),
+                seed * 131 + run, n_steps=steps)
+            return inner.collect_trace()
+
+        return tree, FleetChaosCollector(
+            tree, make_trace, archetype, seed, n_runs=n_runs,
+            n_steps=n_steps, chunk_steps=chunk_steps,
+            window_steps=window_steps, persist=2)
+    return build
+
+
 # -- scoring --------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -664,11 +689,12 @@ def run_entry(entry: CorpusEntry, seed: int = 0) -> CorpusRunResult:
     windows — the same trace the whole-run verdict came from, so the
     onset check costs no extra collection."""
     tree, collector = entry.build(seed)
-    if entry.backend == "chaos":
-        # Chaos backend: the archetype attacks the pipeline, recovery
-        # runs, and the post-recovery flagged verdict (when the scenario
-        # plants one) is scored like any other entry — locating the
-        # planted fault *through* the damaged artifacts is the point.
+    if entry.backend in ("chaos", "fleet"):
+        # Chaos/fleet backends: the archetype attacks the pipeline (one
+        # run, or one tenant of a multi-run fleet), recovery runs, and
+        # the post-recovery flagged verdict (when the scenario plants
+        # one) is scored like any other entry — locating the planted
+        # fault *through* the damaged artifacts is the point.
         outcome = collector.run_chaos()
         from .chaos import EMPTY_VERDICT
         r = score_verdict(entry, outcome.verdict or EMPTY_VERDICT)
@@ -1228,4 +1254,57 @@ register_entry(CorpusEntry(
     min_precision=0.0,
     chaos=ChaosTruth(min_quarantined=1, min_matched_windows=1,
                      fallback_steps=1),
+))
+
+
+# -- fleet: fault-isolated multi-run ingest (repro/fleet, docs/fleet.md) --
+#
+# Eight concurrent ST compute-straggler runs (distinct seeds, same
+# planted fault) tailed by one FleetIngest while the archetype attacks
+# one or two of them.  The gate is isolation: every unaffected run's
+# per-window verdicts must be fingerprint-identical to a solo
+# OnlineAnalyzer poll of the same spool (6 runs x 4 windows = 24 for the
+# two-victim kill, 7 x 4 = 28 otherwise), while the affected runs
+# degrade, recover, or quarantine with structured events.  For fleet
+# entries ``quarantined`` counts quarantined *runs* (circuit breaker),
+# not quarantined files.  Deterministic on a fake clock; CI replays
+# seeds {0, 1, 7}.
+
+register_entry(CorpusEntry(
+    name="fleet/concurrent-producer-kill",
+    app="fleet", backend="fleet",
+    description="Two of eight producers die concurrently mid-flush at "
+                "different seams: both stall out, spool recovery "
+                "quarantines the torn tmp and adopts the orphan, their "
+                "salvaged tails drain, and the six unaffected runs stay "
+                "bit-identical to solo",
+    build=_fleet_spool(FleetConcurrentKill()),
+    truth=_CHAOS_ST_TRUTH,
+    chaos=ChaosTruth(expect_stall=True, expect_adopted=1,
+                     min_matched_windows=24),
+))
+
+register_entry(CorpusEntry(
+    name="fleet/one-tenant-corruption",
+    app="fleet", backend="fleet",
+    description="One tenant's segments rot in two waves: wave one "
+                "degrades the window over it, wave two trips the "
+                "circuit breaker and quarantines the run — the seven "
+                "unaffected runs stay bit-identical to solo",
+    build=_fleet_spool(FleetTenantCorruption()),
+    truth=_CHAOS_ST_TRUTH,
+    chaos=ChaosTruth(min_quarantined=1, min_degraded=1,
+                     min_matched_windows=28),
+))
+
+register_entry(CorpusEntry(
+    name="fleet/analysis-lag-flood",
+    app="fleet", backend="fleet",
+    description="One run floods 3x faster than the shared worker pool "
+                "drains against a 2-window queue: its oldest windows "
+                "shed as structured events, the seven unaffected runs "
+                "never shed and stay bit-identical to solo",
+    build=_fleet_spool(FleetAnalysisLagFlood()),
+    truth=_CHAOS_ST_TRUTH,
+    chaos=ChaosTruth(min_shed=3, min_degraded=3, min_matched_windows=28),
 ))

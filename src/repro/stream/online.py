@@ -208,6 +208,10 @@ class OnlineAnalyzer:
         # bisect the onset *step* — overlapping windows (stride <
         # window_steps) localize in time finer than a whole window.
         self._source: Any = None
+        # Window bounds discovered by pending_bounds but not yet resolved
+        # by consume/skip — keeps re-discovery from double-counting when a
+        # scheduler holds bounds in a queue.
+        self._handed = 0
 
     # -- analyzer resolution ----------------------------------------------
     def _resolve_analyzer(self, schema, meta) -> AutoAnalyzer:
@@ -221,9 +225,78 @@ class OnlineAnalyzer:
 
     # -- window geometry ---------------------------------------------------
     def _next_bounds(self) -> Tuple[int, int]:
-        i = len(self.log.windows)
+        i = len(self.log.windows) + self._handed
         start = i * self.stride
         return start, start + self.window_steps
+
+    def pending_bounds(self, spooled: SpooledTrace,
+                       reload: bool = True) -> List[Tuple[int, int]]:
+        """Discover (without analyzing) the step bounds of every window
+        that has completed on disk and has not yet been handed out.
+
+        This is the discovery half of :meth:`poll`, split out so a
+        scheduler (the fleet ingest tier) can queue the bounds, bound the
+        queue, and decide *when* — or whether — each window is analyzed.
+        Every returned bound must eventually be resolved, in order, by
+        :meth:`consume` or :meth:`skip`; until then it counts as
+        outstanding and will not be re-discovered."""
+        if reload:
+            spooled.reload()
+        self._source = spooled
+        out: List[Tuple[int, int]] = []
+        while True:
+            start, stop = self._next_bounds()
+            if stop <= spooled.n_steps:
+                pass
+            elif spooled.complete and start < spooled.n_steps:
+                stop = spooled.n_steps         # trailing partial window
+            else:
+                break
+            out.append((start, stop))
+            self._handed += 1
+        return out
+
+    def consume(self, spooled: SpooledTrace, start: int,
+                stop: int) -> AnyWindow:
+        """Analyze one discovered window (bounds from
+        :meth:`pending_bounds`), degrading instead of crashing: a range
+        lost to quarantine/compaction or a segment that fails to parse
+        logs a :class:`DegradedWindow` and the stream continues."""
+        analyzer = self._resolve_analyzer(spooled.schema, spooled.meta)
+        self._handed = max(0, self._handed - 1)
+        try:
+            win = spooled.window(start, stop)
+        except SpoolGapError as e:
+            wv: AnyWindow = DegradedWindow(
+                index=len(self.log.windows), start=start, stop=stop,
+                reason="window range lost",
+                detail={"missing": [list(m) for m in e.missing]})
+            self.log.append(wv)
+            return wv
+        except TraceFormatError as e:
+            wv = DegradedWindow(
+                index=len(self.log.windows), start=start, stop=stop,
+                reason="corrupt segment",
+                detail={"path": e.path, "error": e.reason})
+            self.log.append(wv)
+            return wv
+        return self._analyze_window(win, (0, win.n_steps), start, stop,
+                                    analyzer)
+
+    def skip(self, start: int, stop: int, reason: str,
+             detail: Optional[Dict[str, Any]] = None) -> DegradedWindow:
+        """Resolve a discovered window *without* analyzing it — the
+        backpressure path (a shed window) and the integrity path (a
+        window over a segment that failed verification) both land here.
+        The window still occupies its slot in the log as a structured
+        :class:`DegradedWindow`: degraded, never fabricated, never
+        silently absent."""
+        self._handed = max(0, self._handed - 1)
+        wv = DegradedWindow(index=len(self.log.windows), start=start,
+                            stop=stop, reason=reason,
+                            detail=dict(detail or {}))
+        self.log.append(wv)
+        return wv
 
     def _analyze_window(self, trace: RegionTrace,
                         window: Tuple[int, int], start: int, stop: int,
@@ -269,40 +342,12 @@ class OnlineAnalyzer:
         A window that cannot be reassembled — range lost to a quarantined
         segment, pruned by compaction, or a segment that fails to parse —
         is logged as a :class:`DegradedWindow` and consumption continues
-        with the next window."""
-        spooled.reload()
-        self._source = spooled
-        analyzer = self._resolve_analyzer(spooled.schema, spooled.meta)
-        out: List[AnyWindow] = []
-        while True:
-            start, stop = self._next_bounds()
-            if stop <= spooled.n_steps:
-                pass
-            elif (spooled.complete and start < spooled.n_steps):
-                stop = spooled.n_steps         # trailing partial window
-            else:
-                break
-            try:
-                win = spooled.window(start, stop)
-            except SpoolGapError as e:
-                wv: AnyWindow = DegradedWindow(
-                    index=len(self.log.windows), start=start, stop=stop,
-                    reason="window range lost",
-                    detail={"missing": [list(m) for m in e.missing]})
-                self.log.append(wv)
-                out.append(wv)
-                continue
-            except TraceFormatError as e:
-                wv = DegradedWindow(
-                    index=len(self.log.windows), start=start, stop=stop,
-                    reason="corrupt segment",
-                    detail={"path": e.path, "error": e.reason})
-                self.log.append(wv)
-                out.append(wv)
-                continue
-            out.append(self._analyze_window(win, (0, win.n_steps),
-                                            start, stop, analyzer))
-        return out
+        with the next window.  Equivalent to :meth:`pending_bounds`
+        followed by an immediate :meth:`consume` of every bound — the
+        fleet ingest tier uses the split form to interpose its bounded
+        queue between the two halves."""
+        return [self.consume(spooled, start, stop)
+                for start, stop in self.pending_bounds(spooled)]
 
     def follow(self, spooled: SpooledTrace,
                interval: float = 1.0,

@@ -530,6 +530,13 @@ class SpooledTrace:
         return len(self._doc["segments"])
 
     @property
+    def segment_records(self) -> List[Dict[str, Any]]:
+        """Manifest records of the indexed segments (file, start, n_steps,
+        integrity fields) — what an ingest tier verifies against disk
+        before trusting a window."""
+        return [dict(s) for s in self._doc["segments"]]
+
+    @property
     def retained_start(self) -> int:
         """First step still on disk (> 0 once compaction pruned history)."""
         return self._doc.get("retained_start", 0)

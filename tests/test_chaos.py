@@ -528,4 +528,5 @@ class TestChaosCorpus:
         assert (a.quarantined, a.adopted, a.degraded, a.matched,
                 a.comparable) == (b.quarantined, b.adopted, b.degraded,
                                   b.matched, b.comparable)
-        assert a.verdict.doc() == b.verdict.doc()
+        # fingerprint equality is doc() equality (core/report.py)
+        assert a.verdict.fingerprint() == b.verdict.fingerprint()
