@@ -34,12 +34,23 @@ _MN_DEFAULT = [(m, n)
 # Distance-backend seed-row fetches (8 seeds, the shape Algorithm 2's
 # lockstep rounds issue); jax/pallas rows appear when jax imports.
 _SEEDROWS = [(2048, 128), (16384, 128)]
+# Device-lane Algorithm 2: the same search as the algo2/ rows but routed
+# through the lockstep device path (ISSUE 9).  The m=16384/n=128 jax row
+# is the committed reference for the >= 5x speedup claim vs the numpy
+# algo2/m16384/n128 baseline.  Pallas runs in interpret mode off-TPU, so
+# it only appears at the small shape (timing the orchestration, not the
+# kernel; on-TPU it compiles to the tiled kernel proper).
+_ALGO2_DEVICE = [(2048, 128), (16384, 128)]
 GRIDS: Dict[str, Dict[str, list]] = {
     "smoke": {"mn": _MN_SMOKE, "disparity_n": [16, 64],
-              "reducts_attrs": [5, 8], "seedrows": []},
+              "reducts_attrs": [5, 8], "seedrows": [],
+              "algo2_device": [(32, 16)]},
     "default": {"mn": _MN_DEFAULT, "disparity_n": [16, 64, 128, 512],
-                "reducts_attrs": [5, 10, 14], "seedrows": _SEEDROWS},
+                "reducts_attrs": [5, 10, 14], "seedrows": _SEEDROWS,
+                "algo2_device": _ALGO2_DEVICE},
 }
+# interpret-mode pallas above this m is orchestration noise, not signal
+_PALLAS_BENCH_MAX_M = 2048
 
 
 def cluster_workload(m: int, n: int, seed: int = 0) -> np.ndarray:
@@ -113,6 +124,16 @@ def run_grid(grid: str = "default", repeat: int = 3,
                 lambda: find_dissimilarity_bottlenecks(tree, T, rids),
                 repeat)}
 
+    for m, n in spec.get("algo2_device", ()):
+        tree, T, rids = algo2_workload(m, n, seed)
+        for backend in _device_backends(m):
+            entries[f"algo2/m{m}/n{n}/{backend}"] = {
+                "m": m, "n": n, "requires": "jax",
+                "seconds": _best_of(
+                    lambda: find_dissimilarity_bottlenecks(
+                        tree, T, rids, backend=backend),
+                    repeat)}
+
     for n in spec["disparity_n"]:
         tree, vals, rids = disparity_workload(n, seed)
         entries[f"disparity/n{n}"] = {
@@ -154,6 +175,14 @@ def _seedrow_backends() -> List[str]:
         return ["numpy", "jax", "pallas"]
     except ImportError:
         return ["numpy"]
+
+
+def _device_backends(m: int) -> List[str]:
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        return []
+    return ["jax"] + (["pallas"] if m <= _PALLAS_BENCH_MAX_M else [])
 
 
 def all_rows() -> List[Tuple[str, float, str]]:

@@ -45,6 +45,9 @@ def main(argv=None) -> int:
                     help="analyze the run in consecutive N-step windows")
     ap.add_argument("--analyzer-kw", default=None, metavar="JSON",
                     help="AutoAnalyzer kwargs, overriding the trace header")
+    ap.add_argument("--distance-backend", default=None,
+                    choices=("numpy", "jax", "pallas"),
+                    help="distance backend override (default: exact numpy)")
     ap.add_argument("--json", action="store_true",
                     help="emit the verdict(s) as JSON instead of the report")
     args = ap.parse_args(argv)
@@ -68,6 +71,8 @@ def main(argv=None) -> int:
     kw = dict(trace.meta.get("analyzer_kw", {}))
     if args.analyzer_kw:
         kw.update(json.loads(args.analyzer_kw))
+    if args.distance_backend:
+        kw["distance_backend"] = args.distance_backend
     analyzer = AutoAnalyzer(tree, **kw)
 
     if args.per_window:

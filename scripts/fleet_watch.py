@@ -81,6 +81,10 @@ def main(argv=None) -> int:
                     help="consecutive flagged windows that define onset")
     ap.add_argument("--analyzer-kw", default=None, metavar="JSON",
                     help="AutoAnalyzer kwargs, overriding trace headers")
+    ap.add_argument("--distance-backend", default=None,
+                    choices=("numpy", "jax", "pallas"),
+                    help="distance backend for every run's analyzer "
+                         "(default: exact numpy)")
     ap.add_argument("--workers", type=int, default=4, metavar="N",
                     help="shared worker budget: window analyses per poll "
                          "round, fleet-wide (default 4)")
@@ -100,6 +104,13 @@ def main(argv=None) -> int:
                     help="persist the cross-run VerdictIndex here "
                          "(journal + snapshot; reruns resume its counts). "
                          "Default: a temporary directory")
+    ap.add_argument("--retain-runs", type=int, default=None, metavar="N",
+                    help="age index evidence out beyond the N most "
+                         "recently contributing runs (default: unbounded)")
+    ap.add_argument("--journal-max-records", type=int, default=None,
+                    metavar="M",
+                    help="collapse the index journal behind its snapshot "
+                         "once M records accumulate (default: unbounded)")
     ap.add_argument("--follow", action="store_true",
                     help="keep polling until every producer closes")
     ap.add_argument("--interval", type=float, default=1.0, metavar="SEC",
@@ -127,6 +138,7 @@ def main(argv=None) -> int:
     kw = json.loads(args.analyzer_kw) if args.analyzer_kw else {}
     cfg = FleetConfig(window_steps=args.window, persist=args.persist,
                       analyzer_kw=tuple(sorted(kw.items())),
+                      distance_backend=args.distance_backend,
                       max_workers=args.workers,
                       queue_windows=args.queue,
                       max_integrity_failures=args.max_integrity_failures,
@@ -137,7 +149,8 @@ def main(argv=None) -> int:
         tmp = tempfile.TemporaryDirectory(prefix="repro-vindex-")
         index_dir = tmp.name
     try:
-        index = VerdictIndex(index_dir)
+        index = VerdictIndex(index_dir, retain_runs=args.retain_runs,
+                             journal_max_records=args.journal_max_records)
         fleet = FleetIngest(cfg, index=index)
         for name, d in sorted(runs.items()):
             fleet.add_run(name, d)

@@ -44,7 +44,7 @@ import sys
 
 
 def run_one(name: str, seed: int, train_trace_dir=None,
-            train_spool_dir=None) -> dict:
+            train_spool_dir=None, distance_backend=None) -> dict:
     """Run one corpus entry by name and reduce the result to a plain
     row dict (the only thing that crosses the --jobs process boundary:
     CorpusRunResult holds closures and collectors that do not pickle)."""
@@ -53,7 +53,9 @@ def run_one(name: str, seed: int, train_trace_dir=None,
         from repro.scenarios import corpus as corpus_mod
         corpus_mod.TRAIN_SPOOL_BASE = train_spool_dir
     entry = select_entries(names=[name])[0]
-    r = run_entry_robust(entry, seed=seed)
+    overrides = ({"distance_backend": distance_backend}
+                 if distance_backend else None)
+    r = run_entry_robust(entry, seed=seed, analyzer_overrides=overrides)
     notes = []
     if train_trace_dir and entry.backend == "train":
         trace = r.collector.trainer.trace
@@ -167,6 +169,11 @@ def main(argv=None) -> int:
                          "TraceSpool under this base directory (streaming "
                          "collection; each run's spool path is printed so "
                          "CI can replay/byte-compare it)")
+    ap.add_argument("--distance-backend", default=None,
+                    choices=("numpy", "jax", "pallas"),
+                    help="override every entry's analyzer distance "
+                         "backend (accelerated-lane gate: jax/pallas "
+                         "must reproduce the exact-lane verdicts)")
     args = ap.parse_args(argv)
     if args.jobs < 1:
         print("--jobs must be >= 1", file=sys.stderr)
@@ -197,13 +204,15 @@ def main(argv=None) -> int:
                                  mp_context=ctx) as pool:
             futures = [pool.submit(run_one, n, args.seed,
                                    args.train_trace_dir,
-                                   args.train_spool_dir) for n in names]
+                                   args.train_spool_dir,
+                                   args.distance_backend) for n in names]
             # collect in submit order: the table is deterministic no
             # matter which worker finishes first
             rows = [f.result() for f in futures]
     else:
         rows = [run_one(n, args.seed, args.train_trace_dir,
-                        args.train_spool_dir) for n in names]
+                        args.train_spool_dir, args.distance_backend)
+                for n in names]
 
     for row in rows:
         for note in row["notes"]:

@@ -25,14 +25,17 @@ import json
 import sys
 
 
-def snapshot(seed: int) -> dict:
+def snapshot(seed: int, distance_backend: str = None) -> dict:
     from repro.core import AutoAnalyzer
     from repro.scenarios import corpus_entries
 
     out = {}
     for entry in corpus_entries(backend="synthetic"):
         tree, collector = entry.build(seed)
-        analyzer = AutoAnalyzer(tree, **dict(entry.analyzer_kw))
+        kw = dict(entry.analyzer_kw)
+        if distance_backend is not None:
+            kw["distance_backend"] = distance_backend
+        analyzer = AutoAnalyzer(tree, **kw)
         res = analyzer.analyze_collector(collector)
         out[entry.name] = {
             **res.verdict.doc(),
@@ -48,10 +51,10 @@ def snapshot(seed: int) -> dict:
     return out
 
 
-def check(baseline_path: str, seed: int) -> int:
+def check(baseline_path: str, seed: int, distance_backend: str = None) -> int:
     with open(baseline_path) as f:
         baseline = json.load(f)
-    current = snapshot(seed)
+    current = snapshot(seed, distance_backend)
     drifted = []
     for name, want in sorted(baseline.items()):
         got = current.get(name)
@@ -83,16 +86,21 @@ def main(argv=None) -> int:
     ap.add_argument("--check", default=None, metavar="BASELINE",
                     help="diff live verdicts against this snapshot; exit "
                          "1 on any drift")
+    ap.add_argument("--distance-backend", default=None,
+                    choices=("numpy", "jax", "pallas"),
+                    help="override every entry's distance backend; with "
+                         "--check this proves the accelerated lane "
+                         "verdict-equal to the exact baseline")
     args = ap.parse_args(argv)
     if args.check:
         if args.out:
             ap.error("--check does not write a snapshot; drop the output "
                      "path (regenerate first, then --check, if you want "
                      "both)")
-        return check(args.check, args.seed)
+        return check(args.check, args.seed, args.distance_backend)
     if not args.out:
         ap.error("either an output path or --check is required")
-    doc = snapshot(args.seed)
+    doc = snapshot(args.seed, args.distance_backend)
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)
         f.write("\n")

@@ -78,6 +78,10 @@ def main(argv=None) -> int:
                     help="restrict onset detection to one bottleneck kind")
     ap.add_argument("--analyzer-kw", default=None, metavar="JSON",
                     help="AutoAnalyzer kwargs, overriding the trace header")
+    ap.add_argument("--distance-backend", default=None,
+                    choices=("numpy", "jax", "pallas"),
+                    help="distance backend for the per-window analyzer "
+                         "(default: exact numpy)")
     ap.add_argument("--follow", action="store_true",
                     help="keep polling until the producer closes the spool")
     ap.add_argument("--interval", type=float, default=1.0, metavar="SEC",
@@ -147,7 +151,8 @@ def main(argv=None) -> int:
             waited += args.interval
     kw = json.loads(args.analyzer_kw) if args.analyzer_kw else None
     online = OnlineAnalyzer(window_steps=args.window, stride=args.stride,
-                            persist=args.persist, analyzer_kw=kw)
+                            persist=args.persist, analyzer_kw=kw,
+                            distance_backend=args.distance_backend)
 
     detector = (StallDetector(args.max_stall, base_interval=args.interval)
                 if args.follow and args.max_stall is not None else None)

@@ -251,7 +251,8 @@ class AutoAnalyzer:
                         rids: List[int]) -> DisparityReport:
         vals = self._disparity_values(rm, rids)
         return find_disparity_bottlenecks(self.tree, vals, rids,
-                                          wall=rm.wall_all(rids))
+                                          wall=rm.wall_all(rids),
+                                          backend=self.distance_backend)
 
     # -- decision tables ---------------------------------------------------
     def _dissimilarity_table(self, rm: RegionMetrics,
@@ -294,7 +295,8 @@ class AutoAnalyzer:
         for a in self.attributes:
             avg = np.array([rm.region_mean(a, r) for r in rids])
             sev = kmeans_severity(avg,
-                                  floor_decades=SEVERITY_SPAN_DECADES)
+                                  floor_decades=SEVERITY_SPAN_DECADES,
+                                  backend=self.distance_backend)
             rows_by_attr.append([1 if s > MEDIUM else 0 for s in sev])
         rows = [tuple(rows_by_attr[k][j] for k in range(len(self.attributes)))
                 for j in range(len(rids))]

@@ -128,10 +128,19 @@ class ClusterResult:
 # fast route for large m, validated against NumPy by the backend tests.
 
 
+# Device-capable backends additionally expose the lockstep-path API:
+# ``supports_device`` (class flag), ``device_arrays(handle)`` returning
+# the device-resident float32 ``(W, sq)`` pair, and
+# ``device_rows(handle, idx)`` returning a *device* (len(idx), m) float32
+# row block — one batched kernel/XLA call for all requested seeds, no
+# host round-trip.  ``seed_rows`` stays the host float64 surface.
+
+
 class _NumpyDistanceBackend:
     """Exact float64 seed rows (the bit-exact default)."""
 
     name = "numpy"
+    supports_device = False
 
     def prepare(self, W: np.ndarray, sq: np.ndarray):
         return (W, sq)
@@ -156,6 +165,7 @@ class _JaxDistanceBackend:
     """Jitted JAX seed rows (float32 Gram on the default device)."""
 
     name = "jax"
+    supports_device = True
 
     def __init__(self):
         import jax
@@ -174,7 +184,10 @@ class _JaxDistanceBackend:
         dev = self._jax.device_put
         return (dev(W.astype(np.float32)), dev(sq.astype(np.float32)))
 
-    def seed_rows(self, handle, idx: Sequence[int]) -> np.ndarray:
+    def device_arrays(self, handle):
+        return handle
+
+    def device_rows(self, handle, idx: Sequence[int]):
         Wd, sqd = handle
         ii = np.asarray(idx, dtype=np.int32)
         # Pad the seed count to a power of two so jit traces stay bounded
@@ -183,7 +196,10 @@ class _JaxDistanceBackend:
         kp = 1 << max(0, (k - 1).bit_length())
         pad = np.full(kp, ii[0], dtype=np.int32)
         pad[:k] = ii
-        out = np.asarray(self._rows(Wd, sqd, pad)[:k], dtype=np.float64)
+        return self._rows(Wd, sqd, pad)[:k]
+
+    def seed_rows(self, handle, idx: Sequence[int]) -> np.ndarray:
+        out = np.asarray(self.device_rows(handle, idx), dtype=np.float64)
         return np.maximum(out, 0.0)
 
 
@@ -192,6 +208,7 @@ class _PallasDistanceBackend:
     compiled on a TPU target, interpret mode elsewhere."""
 
     name = "pallas"
+    supports_device = True
 
     def __init__(self):
         import jax
@@ -206,16 +223,22 @@ class _PallasDistanceBackend:
         dev = self._jax.device_put
         return (dev(W.astype(np.float32)), dev(sq.astype(np.float32)))
 
-    def seed_rows(self, handle, idx: Sequence[int]) -> np.ndarray:
+    def device_arrays(self, handle):
+        return handle
+
+    def device_rows(self, handle, idx: Sequence[int]):
         Wd, sqd = handle
         ii = np.asarray(idx, dtype=np.int32)
         k = int(ii.size)
         kp = 1 << max(3, (k - 1).bit_length())   # sublane-friendly >= 8
         pad = np.full(kp, ii[0], dtype=np.int32)
         pad[:k] = ii
-        out = self._dist.seed_rows(Wd, sqd, pad,
-                                   interpret=self._interpret)
-        return np.maximum(np.asarray(out[:k], dtype=np.float64), 0.0)
+        return self._dist.multi_seed_rows(Wd, sqd, pad,
+                                          interpret=self._interpret)[:k]
+
+    def seed_rows(self, handle, idx: Sequence[int]) -> np.ndarray:
+        out = np.asarray(self.device_rows(handle, idx), dtype=np.float64)
+        return np.maximum(out, 0.0)
 
 
 DISTANCE_BACKENDS = ("numpy", "jax", "pallas")
@@ -242,6 +265,15 @@ def get_distance_backend(backend: DistanceBackendSpec = "numpy"):
     if backend not in _BACKEND_CACHE:
         _BACKEND_CACHE[backend] = _BACKEND_FACTORIES[backend]()
     return _BACKEND_CACHE[backend]
+
+
+def _is_device_backend(backend: DistanceBackendSpec) -> bool:
+    """True when the spec names (or is) a device-capable backend — used
+    to select the jitted device variants of the clustering passes without
+    constructing the backend (so the numpy default never imports jax)."""
+    if isinstance(backend, str):
+        return backend in ("jax", "pallas")
+    return bool(getattr(backend, "supports_device", False))
 
 
 def _expand_column_values(values, m: int, n_cols: int) -> np.ndarray:
@@ -296,8 +328,10 @@ def _greedy_cluster(m: int,
         else:
             labels[p] = n_clusters  # isolated point => its own cluster
         n_clusters += 1
+    # Seeds are ascending first-unassigned indices, so the labels are
+    # first-occurrence-canonical as produced (see canonical_labels).
     return ClusterResult(labels=labels, n_clusters=n_clusters,
-                         threshold=used_threshold)
+                         threshold=used_threshold, _canonical=labels)
 
 
 def optics_cluster(
@@ -377,7 +411,11 @@ class IncrementalClusterState:
                  count_threshold: int = 1,
                  backend: DistanceBackendSpec = "numpy",
                  row_cache: int = 256):
-        self._W = np.array(matrix, dtype=np.float64)
+        # The matrix is aliased, not copied: push copies before the first
+        # mutation (copy-on-push below), so the caller's array is never
+        # written — but the caller must not mutate it while the state is
+        # live (cached base rows are computed against it).
+        self._W = np.asarray(matrix, dtype=np.float64)
         if self._W.ndim != 2:
             raise ValueError("matrix must be (m, n)")
         self._m = self._W.shape[0]
@@ -386,13 +424,23 @@ class IncrementalClusterState:
         self._count_threshold = count_threshold
         # Pristine base matrix: push/pop mutate only _W; base D² rows are
         # always computed against _W0 and adjusted by the stack deltas.
-        self._W0 = self._W.copy()
+        # _W0 shares storage with _W until the first push copies it
+        # (copy-on-push keeps the backend handle — prepared against _W0 —
+        # seeing pristine data while saving an (m, n) copy for the
+        # batch-only states Algorithm 2's sweeps construct per analysis).
+        self._W0 = self._W
         self._sq0 = np.einsum("ij,ij->i", self._W0, self._W0)
         self._sq = self._sq0
         self._backend = get_distance_backend(backend)
         self._handle = self._backend.prepare(self._W0, self._sq0)
         self._rows: "OrderedDict[int, np.ndarray]" = OrderedDict()
         self._row_cache = max(int(row_cache), 1)
+        # Base-row fetch accounting (host LRU + device row cache share
+        # it): backend calls, total rows fetched, per-seed fetch counts —
+        # the dedup contract tests/test_device_lockstep.py pins.
+        self.fetch_stats: Dict[str, object] = {
+            "calls": 0, "rows": 0, "per_seed": {}}
+        self._device = None   # DeviceLockstep | False (probed) | None
         # stack of (cols, old values, installed values, saved sq) — sq is
         # replaced, not updated in place, so popping restores it
         # bit-for-bit; the installed values (not the live matrix) drive the
@@ -405,6 +453,19 @@ class IncrementalClusterState:
     def matrix(self) -> np.ndarray:
         """The current trial matrix (base + active toggles).  Read-only by
         convention: mutate only through push/pop."""
+        return self._materialize()
+
+    def _materialize(self) -> np.ndarray:
+        """The mutated trial matrix, copied from the pristine base on
+        first need.  Pushes defer the (m, n) copy until something
+        actually reads the matrix (the common Algorithm 2 pattern —
+        push a toggle, run batched trials on top of the *stack deltas*,
+        pop — never does), so a flat-tree sweep performs no full-matrix
+        copy at all."""
+        if self._W is self._W0 and self._stack:
+            self._W = self._W0.copy()
+            for cols, _old, new, _sq in self._stack:
+                self._W[:, cols] = new
         return self._W
 
     @property
@@ -419,18 +480,24 @@ class IncrementalClusterState:
         original ``T`` column to restore), or an (m, len(cols)) array —
         see :func:`_expand_column_values`."""
         cols = [int(c) for c in cols]
+        if self._stack:
+            # Nested pushes may overlap columns: materialize so `old`
+            # reads the values the previous level installed.
+            self._materialize()
         old = self._W[:, cols].copy()
         new = _expand_column_values(values, self._m, len(cols))
         saved_sq = self._sq
         self._sq = saved_sq - np.einsum("ij,ij->i", old, old) \
             + np.einsum("ij,ij->i", new, new)
-        self._W[:, cols] = new
+        if self._W is not self._W0:
+            self._W[:, cols] = new
         self._stack.append((cols, old, new, saved_sq))
 
     def pop(self) -> None:
         """Revert the most recent :meth:`push` exactly."""
         cols, old, _new, saved_sq = self._stack.pop()
-        self._W[:, cols] = old
+        if self._W is not self._W0:
+            self._W[:, cols] = old
         self._sq = saved_sq
 
     def _ensure_base_rows(self, ps: Sequence[int]) -> None:
@@ -440,6 +507,11 @@ class IncrementalClusterState:
         missing = [p for p in ps if p not in self._rows]
         if missing:
             rows = self._backend.seed_rows(self._handle, missing)
+            st = self.fetch_stats
+            st["calls"] += 1
+            st["rows"] += len(missing)
+            for p in missing:
+                st["per_seed"][p] = st["per_seed"].get(p, 0) + 1
             for p, row in zip(missing, rows):
                 self._rows[p] = row
         for p in ps:
@@ -481,10 +553,40 @@ class IncrementalClusterState:
         np.maximum(row, 0.0, out=row)
         return row
 
+    def _device_lockstep(self):
+        """The :class:`~repro.core.lockstep.DeviceLockstep` twin for
+        device-capable backends, created lazily (``False`` once probed
+        unavailable).  The numpy default never takes this route, so its
+        bit-exact host semantics are untouched."""
+        if self._device is None:
+            if getattr(self._backend, "supports_device", False) \
+                    and self._W0.shape[1] > 0:
+                from .lockstep import DeviceLockstep
+                self._device = DeviceLockstep(
+                    self._backend, self._handle, self._threshold,
+                    self._threshold_frac, self._count_threshold,
+                    self.fetch_stats)
+            else:
+                self._device = False
+        return self._device or None
+
+    def _device_results(self, out) -> List[ClusterResult]:
+        lab, ncl, thr = out
+        # Greedy seeds are first-unassigned indices in ascending order, so
+        # lockstep labels are first-occurrence-canonical by construction:
+        # preset _canonical and same_partition skips its np.unique pass.
+        return [ClusterResult(labels=lab[t], n_clusters=int(ncl[t]),
+                              threshold=float(thr[t]), _canonical=lab[t])
+                for t in range(lab.shape[0])]
+
     def cluster(self) -> ClusterResult:
         """Cluster the current trial matrix; identical to
         ``optics_cluster(state.matrix, ...)`` with the state's parameters
         (bit-for-bit on integer-valued data, to roundoff otherwise)."""
+        if not self._stack:
+            dev = self._device_lockstep()
+            if dev is not None:
+                return self._device_results(dev.cluster_batch([[]]))[0]
         return _greedy_cluster(self._m, self._row, self._sq,
                                self._threshold, self._threshold_frac,
                                self._count_threshold)
@@ -517,6 +619,16 @@ class IncrementalClusterState:
             zero = np.isscalar(values) and float(values) == 0.0
             vals_l.append(None if zero else values)
 
+        # All-zero toggles on the pristine base matrix — exactly the shape
+        # of Algorithm 2's depth-1 sweep, composite-window rounds and the
+        # baseline — run as lockstep device rounds on device-capable
+        # backends (one fused dispatch per round, donated buffers).
+        if not self._stack and all(v is None for v in vals_l):
+            dev = self._device_lockstep()
+            if dev is not None:
+                return self._device_results(dev.cluster_batch(cols_l))
+
+        self._materialize()   # _batch_round reads the trial matrix
         labels = np.full((nt, m), -1, dtype=np.int64)
         n_clusters = np.zeros(nt, dtype=np.int64)
         used_thr = np.full(nt, -1.0)
@@ -537,10 +649,17 @@ class IncrementalClusterState:
                     self._batch_round(chunk, p, row_p, cols_l, vals_l,
                                       labels, n_clusters, used_thr, ct)
             active = [t for t in active if (labels[t] < 0).any()]
-        return [ClusterResult(labels=labels[t].copy(),
-                              n_clusters=int(n_clusters[t]),
-                              threshold=float(used_thr[t]))
-                for t in range(nt)]
+        out = []
+        for t in range(nt):
+            lt = labels[t].copy()
+            # Greedy labels are first-occurrence-canonical by construction
+            # (seeds are ascending first-unassigned indices) — preset the
+            # canonical cache so same_partition skips np.unique.
+            out.append(ClusterResult(labels=lt,
+                                     n_clusters=int(n_clusters[t]),
+                                     threshold=float(used_thr[t]),
+                                     _canonical=lt))
+        return out
 
     def _batch_round(self, ts, p, row_p, cols_l, vals_l, labels,
                      n_clusters, used_thr, ct) -> None:
@@ -605,6 +724,15 @@ def is_similar(vectors: np.ndarray, **kw) -> bool:
     return optics_cluster(vectors, **kw).n_clusters == 1
 
 
+# dissimilarity_severity switches to a one-shot one-hot gemm for cluster
+# centroids above this point count.  The gemm accumulates in a different
+# order than np.mean, so its floats are not bitwise-identical to the
+# per-cluster loop — the gate sits far above every corpus entry's m, so
+# the pinned VERDICTS_synthetic.json severities are computed by the loop
+# on every backend while fleet-scale windows take the O(m·n) gemm.
+_SEVERITY_GEMM_MIN_M = 4096
+
+
 def dissimilarity_severity(result: ClusterResult, vectors: np.ndarray) -> float:
     """A scalar severity in [0, 1] summarising how dissimilar the processes
     are (the paper prints e.g. 'dissimilarity severity, 5: 0.783958').
@@ -616,19 +744,89 @@ def dissimilarity_severity(result: ClusterResult, vectors: np.ndarray) -> float:
         return 0.0
     largest = max(result.sizes())
     frac = 1.0 - largest / m
-    centroids = np.stack([v[result.labels == c].mean(axis=0)
-                          for c in range(result.n_clusters)])
-    scale = float(np.linalg.norm(v.mean(axis=0))) or 1.0
-    spread = float(np.std(np.linalg.norm(centroids - v.mean(axis=0), axis=1)))
+    if m >= _SEVERITY_GEMM_MIN_M and result.n_clusters <= 64:
+        onehot = (result.labels[None, :] ==
+                  np.arange(result.n_clusters)[:, None]).astype(np.float64)
+        counts = onehot.sum(axis=1)
+        centroids = (onehot @ v) / counts[:, None]
+        # The overall mean is the count-weighted centroid mean — no
+        # second O(m·n) pass over the matrix.
+        mean = (counts @ centroids) / m
+    else:
+        centroids = np.stack([v[result.labels == c].mean(axis=0)
+                              for c in range(result.n_clusters)])
+        mean = v.mean(axis=0)
+    scale = float(np.linalg.norm(mean)) or 1.0
+    spread = float(np.std(np.linalg.norm(centroids - mean, axis=1)))
     return min(1.0, frac + spread / (scale + 1e-30))
 
 
+# Jitted Lloyd iterations (device k-means variant), cached at module
+# level so every kmeans_1d(backend="jax"/"pallas") call shares one trace
+# per (n, k, dtype).
+_KMEANS_JIT: Dict[str, object] = {}
+
+
+def _kmeans_lloyd_jax(x: np.ndarray, centroids: np.ndarray,
+                      n_iter: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Run the Lloyd iterations of :func:`kmeans_1d` as one jitted
+    float64 ``lax.while_loop`` (scatter-add centroid updates — the same
+    values ``np.bincount`` produces) and return (centroids, labels).
+    Mirrors the numpy loop's semantics exactly: labels are the argmin
+    against the centroids *entering* the convergence iteration, and the
+    converged centroids keep their pre-update values."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    fn = _KMEANS_JIT.get("lloyd")
+    if fn is None:
+        @functools.partial(jax.jit, static_argnames=("n_iter",))
+        def fn(xv, cent0, *, n_iter):
+            k = cent0.shape[0]
+
+            def cond(s):
+                it, done, _, _ = s
+                return (it < n_iter) & (~done)
+
+            def body(s):
+                it, _, cent, _ = s
+                d = jnp.abs(xv[:, None] - cent[None, :])
+                lab = jnp.argmin(d, axis=1).astype(jnp.int64)
+                counts = jnp.zeros(k, xv.dtype).at[lab].add(1.0)
+                sums = jnp.zeros(k, xv.dtype).at[lab].add(xv)
+                # Empty clusters keep their previous centroid.
+                new = jnp.where(counts > 0,
+                                sums / jnp.maximum(counts, 1.0), cent)
+                done = jnp.allclose(new, cent)
+                return (it + 1, done, jnp.where(done, cent, new), lab)
+
+            lab0 = jnp.zeros(xv.shape[0], dtype=jnp.int64)
+            _, _, cent, lab = jax.lax.while_loop(
+                cond, body, (jnp.int32(0), jnp.bool_(False), cent0, lab0))
+            return cent, lab
+
+        _KMEANS_JIT["lloyd"] = fn
+
+    from jax.experimental import enable_x64
+    with enable_x64():
+        cent, lab = fn(jnp.asarray(x), jnp.asarray(centroids),
+                       n_iter=int(n_iter))
+        return np.asarray(cent), np.asarray(lab)
+
+
 def kmeans_1d(values: np.ndarray, k: int, n_iter: int = 100,
-              seed: int = 0) -> np.ndarray:
+              seed: int = 0,
+              backend: DistanceBackendSpec = "numpy") -> np.ndarray:
     """Deterministic 1-D k-means (Hartigan/Wong-style Lloyd iterations with
     quantile init).  Returns the label per value, labels ordered so that
     label i has the i-th smallest centroid.  Centroid updates run through
-    ``np.bincount`` (no per-cluster Python loop)."""
+    ``np.bincount`` (no per-cluster Python loop).
+
+    With a device backend the Lloyd iterations run as one jitted float64
+    while-loop (:func:`_kmeans_lloyd_jax`); the quantile init and the
+    final rank-by-centroid stay on host either way."""
     x = np.asarray(values, dtype=np.float64).ravel()
     n = x.size
     if n == 0:
@@ -640,17 +838,21 @@ def kmeans_1d(values: np.ndarray, k: int, n_iter: int = 100,
         return np.array([mapping[val] for val in x], dtype=np.int64)
     # Quantile init is deterministic and robust for 1-D data.
     centroids = np.quantile(x, np.linspace(0, 1, k))
-    lab = np.zeros(n, dtype=np.int64)
-    for _ in range(n_iter):
-        d = np.abs(x[:, None] - centroids[None, :])
-        lab = np.argmin(d, axis=1)
-        counts = np.bincount(lab, minlength=k)
-        sums = np.bincount(lab, weights=x, minlength=k)
-        # Empty clusters keep their previous centroid.
-        new = np.where(counts > 0, sums / np.maximum(counts, 1), centroids)
-        if np.allclose(new, centroids):
-            break
-        centroids = new
+    if _is_device_backend(backend):
+        centroids, lab = _kmeans_lloyd_jax(x, centroids, n_iter)
+    else:
+        lab = np.zeros(n, dtype=np.int64)
+        for _ in range(n_iter):
+            d = np.abs(x[:, None] - centroids[None, :])
+            lab = np.argmin(d, axis=1)
+            counts = np.bincount(lab, minlength=k)
+            sums = np.bincount(lab, weights=x, minlength=k)
+            # Empty clusters keep their previous centroid.
+            new = np.where(counts > 0, sums / np.maximum(counts, 1),
+                           centroids)
+            if np.allclose(new, centroids):
+                break
+            centroids = new
     order = np.argsort(centroids)
     rank = np.empty(k, dtype=np.int64)
     rank[order] = np.arange(k)
@@ -692,7 +894,8 @@ def severity_scale(values, k: int = 5,
 
 
 def kmeans_severity(values, k: int = 5, log_space: bool = True,
-                    floor_decades: Optional[float] = None) -> np.ndarray:
+                    floor_decades: Optional[float] = None,
+                    backend: DistanceBackendSpec = "numpy") -> np.ndarray:
     """Classify per-region scalar metrics into the five severity categories
     (paper §4.2.2): very low(0), low(1), medium(2), high(3), very high(4).
 
@@ -717,7 +920,7 @@ def kmeans_severity(values, k: int = 5, log_space: bool = True,
         return np.zeros(x.size, dtype=np.int64)
     if log_space:
         x = np.log10(np.maximum(x, top * 1e-4))
-    labels = kmeans_1d(x, min(k, x.size))
+    labels = kmeans_1d(x, min(k, x.size), backend=backend)
     # centroid per cluster
     cents = np.array([x[labels == c].mean() if (labels == c).any() else -np.inf
                       for c in range(labels.max() + 1)])

@@ -186,9 +186,14 @@ def find_dissimilarity_bottlenecks(
         return [r for r in regions.values() if r.depth == 1]
 
     # Lines 3-9: zero depth>1 columns, baseline clustering.
-    work = T.copy()
     zeroed0 = [col[rid] for rid, r in regions.items() if r.depth > 1]
-    work[:, zeroed0] = 0.0
+    if cluster_fn is None and not zeroed0:
+        # Fast path, flat tree: nothing to zero and the incremental state
+        # never mutates its input (copy-on-push), so skip the (m, n) copy.
+        work = T
+    else:
+        work = T.copy()
+        work[:, zeroed0] = 0.0
 
     if cluster_fn is not None:
         state = _ScratchToggleState(work, cluster_fn)
@@ -305,7 +310,8 @@ def time_share_weighting(tree: RegionTree, wall: np.ndarray,
 def time_share_severity(tree: RegionTree, values: np.ndarray,
                         region_ids: Sequence[int], wall: np.ndarray,
                         k: int = 5,
-                        floor_decades: float = SEVERITY_SPAN_DECADES
+                        floor_decades: float = SEVERITY_SPAN_DECADES,
+                        backend: DistanceBackendSpec = "numpy"
                         ) -> np.ndarray:
     """Time-share-weighted severity banding (ROADMAP carry-over study).
 
@@ -332,7 +338,8 @@ def time_share_severity(tree: RegionTree, values: np.ndarray,
     stretched tree no longer produces a spurious bottleneck.
     """
     values = np.asarray(values, dtype=np.float64)
-    sev = kmeans_severity(values, k=k, floor_decades=floor_decades)
+    sev = kmeans_severity(values, k=k, floor_decades=floor_decades,
+                          backend=backend)
     ratios, _ = time_share_weighting(tree, wall, region_ids)
     inner = np.nonzero(ratios < 1.0)[0]
     top = values.max() if values.size else 0.0
@@ -367,6 +374,7 @@ def find_disparity_bottlenecks(
     region_ids: Sequence[int],
     k: int = 5,
     wall: Optional[np.ndarray] = None,
+    backend: DistanceBackendSpec = "numpy",
 ) -> DisparityReport:
     """Disparity search (paper §4.2.2 + §4.3).
 
@@ -384,9 +392,10 @@ def find_disparity_bottlenecks(
     """
     values = np.asarray(values, dtype=np.float64)
     if wall is not None:
-        sev = time_share_severity(tree, values, region_ids, wall, k=k)
+        sev = time_share_severity(tree, values, region_ids, wall, k=k,
+                                  backend=backend)
     else:
-        sev = kmeans_severity(values, k=k)
+        sev = kmeans_severity(values, k=k, backend=backend)
     sev_by_id = {rid: int(s) for rid, s in zip(region_ids, sev)}
     val_by_id = {rid: float(v) for rid, v in zip(region_ids, values)}
     regions = {r.region_id: r for r in tree.regions()

@@ -37,9 +37,29 @@ Crash safety specifics:
   nothing, so "seen in N runs" counts are exact under at-least-once
   delivery.
 
+Retention (both knobs optional; off by default):
+
+* ``retain_runs=N`` ages out aggregate evidence beyond a horizon of the
+  N most-recently-contributing runs: when run N+1 arrives, the stalest
+  run's window counts are subtracted from every signature (signatures
+  left with no runs disappear from the report).  Eviction drops
+  **aggregates only** — the ``(run, fp, start, stop)`` idempotence keys
+  are never dropped, so crash-recover-refeed of an evicted run's
+  records stays a no-op and live counts stay exact.  Eviction is a pure
+  function of journal order (recency = the order runs contribute *new*
+  windows; duplicates do not advance it), so journal-only replay
+  reconstructs the same retained state the live index held.
+* ``journal_max_records=M`` caps journal growth past snapshots: once M
+  records accumulate since the last truncation, the journal is
+  atomically rewritten (tmp + rename) to a single ``{"_base": N}``
+  control line meaning "records 1..N are covered by the snapshot" —
+  and truncation only ever runs immediately after a successful snapshot
+  rename, so the snapshot on disk always covers the truncated prefix.
+
 Fault points (armed by tests/test_fleet.py's kill sweep):
 ``vindex.journal.pre_append``, ``vindex.journal.appended``,
-``vindex.snapshot.written``, ``vindex.snapshot.renamed``.
+``vindex.snapshot.written``, ``vindex.snapshot.renamed``,
+``vindex.journal.truncate.written``, ``vindex.journal.truncated``.
 """
 from __future__ import annotations
 
@@ -64,13 +84,23 @@ class VerdictIndex:
     directory that holds a foreign/newer-format index.
     """
 
-    def __init__(self, directory: str, snapshot_every: int = 16):
+    def __init__(self, directory: str, snapshot_every: int = 16,
+                 retain_runs: Optional[int] = None,
+                 journal_max_records: Optional[int] = None):
         if snapshot_every < 1:
             raise ValueError(
                 f"snapshot_every must be >= 1, got {snapshot_every}")
+        if retain_runs is not None and retain_runs < 1:
+            raise ValueError(
+                f"retain_runs must be >= 1, got {retain_runs}")
+        if journal_max_records is not None and journal_max_records < 1:
+            raise ValueError(f"journal_max_records must be >= 1, "
+                             f"got {journal_max_records}")
         os.makedirs(directory, exist_ok=True)
         self.directory = directory
         self.snapshot_every = snapshot_every
+        self.retain_runs = retain_runs
+        self.journal_max_records = journal_max_records
         self._journal_path = os.path.join(directory, JOURNAL_NAME)
         self._snapshot_path = os.path.join(directory, SNAPSHOT_NAME)
         # fingerprint -> {"kinds", "paths", "runs": {run: n_windows},
@@ -79,6 +109,12 @@ class VerdictIndex:
         self._keys: set = set()      # (run, fp, start, stop) idempotence
         self._applied = 0            # journal records folded into state
         self._since_snapshot = 0
+        # run -> recency rank (order of last *new* window); drives the
+        # retain_runs horizon and replays deterministically
+        self._run_seq: Dict[str, int] = {}
+        self._seq = 0
+        self._journal_base = 0       # records folded into a {"_base"} line
+        self.evicted_runs = 0        # lifetime eviction count (telemetry)
         self.recovered_event: Optional[Dict[str, Any]] = None
         self._recover()
 
@@ -104,6 +140,18 @@ class VerdictIndex:
                 "runs": dict(agg["runs"]), "windows": int(agg["windows"]),
             }
         self._keys = {tuple(k) for k in doc["keys"]}
+        # pre-retention snapshots carry no run ordering: reconstruct a
+        # deterministic one from the aggregate (alphabetical — the
+        # journal-order recency is gone, but any fixed order keeps
+        # subsequent evictions replayable from *this* snapshot on)
+        seq = doc.get("run_seq")
+        if seq is None:
+            runs = sorted({r for agg in self._by_fp.values()
+                           for r in agg["runs"]})
+            seq = {r: i + 1 for i, r in enumerate(runs)}
+        self._run_seq = {r: int(s) for r, s in seq.items()}
+        self._seq = int(doc.get("seq", max(self._run_seq.values(),
+                                           default=0)))
         return int(doc["applied"])
 
     def _recover(self) -> None:
@@ -129,12 +177,33 @@ class VerdictIndex:
                         f"{self._journal_path}: corrupt journal record "
                         f"{i} (not the tail — the index cannot trust "
                         f"anything after it)")
+                if "_base" in rec:
+                    # truncation marker: records 1..N live only in the
+                    # snapshot now.  Truncation runs strictly after the
+                    # covering snapshot's rename, so a marker past the
+                    # snapshot means the directory was tampered with.
+                    if i != 0:
+                        raise ValueError(
+                            f"{self._journal_path}: truncation marker at "
+                            f"record {i}, expected only at the head")
+                    base = int(rec["_base"])
+                    if base > applied:
+                        raise ValueError(
+                            f"{self._journal_path}: truncation marker "
+                            f"covers {base} records but the snapshot "
+                            f"only covers {applied} — truncated records "
+                            f"are unrecoverable")
+                    replayed = self._journal_base = base
+                    continue
                 replayed += 1
                 if replayed <= applied:
                     continue            # already folded into the snapshot
                 self._fold(rec)
         self._applied = max(applied, replayed)
         event["replayed"] = max(0, replayed - applied)
+        # a tightened horizon on reopen evicts immediately (and the
+        # replay above already enforced the configured one per fold)
+        self._evict_stale()
         self.recovered_event = event
 
     # -- state -------------------------------------------------------------
@@ -151,7 +220,31 @@ class VerdictIndex:
                         "windows": 0})
         agg["runs"][rec["run"]] = agg["runs"].get(rec["run"], 0) + 1
         agg["windows"] += 1
+        # recency advances only on a genuinely new window, so journal
+        # replay (where duplicates fold to nothing) re-derives the same
+        # ordering the live index used
+        self._seq += 1
+        self._run_seq[rec["run"]] = self._seq
+        self._evict_stale()
         return True
+
+    def _evict_stale(self) -> None:
+        """Age out the stalest runs' aggregate evidence past the
+        ``retain_runs`` horizon.  Idempotence keys are kept: an evicted
+        run's refed records must still fold to nothing."""
+        if self.retain_runs is None:
+            return
+        while len(self._run_seq) > self.retain_runs:
+            run = min(self._run_seq, key=self._run_seq.get)
+            del self._run_seq[run]
+            self.evicted_runs += 1
+            for fp in list(self._by_fp):
+                agg = self._by_fp[fp]
+                n = agg["runs"].pop(run, None)
+                if n:
+                    agg["windows"] -= n
+                if not agg["runs"]:
+                    del self._by_fp[fp]
 
     def record(self, run: str, verdict: Verdict, start: int,
                stop: int) -> Dict[str, Any]:
@@ -201,6 +294,8 @@ class VerdictIndex:
                      "windows": agg["windows"]}
                 for fp, agg in sorted(self._by_fp.items())},
             "keys": sorted(list(k) for k in self._keys),
+            "run_seq": dict(sorted(self._run_seq.items())),
+            "seq": self._seq,
         }
         tmp = self._snapshot_path + ".tmp"
         with open(tmp, "w") as f:
@@ -210,7 +305,28 @@ class VerdictIndex:
         os.replace(tmp, self._snapshot_path)
         fault_point("vindex.snapshot.renamed")
         self._since_snapshot = 0
+        if self.journal_max_records is not None and \
+                self._applied - self._journal_base >= \
+                self.journal_max_records:
+            self._truncate_journal()
         return self._snapshot_path
+
+    def _truncate_journal(self) -> None:
+        """Atomically collapse the journal to a ``{"_base": N}`` control
+        line.  Called only right after a snapshot rename, so the
+        snapshot on disk covers every collapsed record; a crash between
+        the tmp write and the rename leaves the long journal in place
+        (old-state semantics, replay skips the covered prefix)."""
+        marker = json.dumps({"_base": self._applied},
+                            separators=(",", ":")) + "\n"
+        tmp = self._journal_path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(marker)
+            f.flush()
+        fault_point("vindex.journal.truncate.written")
+        os.replace(tmp, self._journal_path)
+        fault_point("vindex.journal.truncated")
+        self._journal_base = self._applied
 
     def close(self) -> None:
         """Final snapshot, so a reopened index replays no journal tail."""

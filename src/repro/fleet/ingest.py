@@ -187,6 +187,10 @@ class FleetConfig:
     stride: Optional[int] = None
     persist: int = 2
     analyzer_kw: Tuple[Tuple[str, Any], ...] = ()
+    # distance backend for every run's analyzer ("numpy" exact default;
+    # "jax"/"pallas" route clustering through the device lockstep path).
+    # None defers to analyzer_kw / per-run header meta.
+    distance_backend: Optional[str] = None
     # service bounds
     max_workers: int = 4           # window analyses per tick, fleet-wide
     queue_windows: int = 8         # bounded per-run window queue
@@ -224,7 +228,8 @@ class RunSupervisor:
         self.online = OnlineAnalyzer(window_steps=cfg.window_steps,
                                      stride=cfg.stride,
                                      persist=cfg.persist,
-                                     analyzer_kw=dict(cfg.analyzer_kw))
+                                     analyzer_kw=dict(cfg.analyzer_kw),
+                                     distance_backend=cfg.distance_backend)
         self.state = WAITING
         self.spooled: Optional[SpooledTrace] = None
         # queue entries: (start, stop, bad_detail-or-None); strict FIFO —

@@ -1,8 +1,8 @@
-"""Tiled Pallas kernel for batched pairwise-distance seed rows.
+"""Tiled Pallas kernels for batched pairwise-distance seed rows.
 
 The AutoAnalyzer clustering core (``repro.core.clustering``) only ever
 needs squared Euclidean distances from a handful of *seed* points to all
-m points — never the full m×m matrix.  This kernel computes one
+m points — never the full m×m matrix.  These kernels compute one
 (seeds, block_m) output tile per grid step from the Gram identity
 
     D²[s, q] = |W_s|² + |W_q|² − 2·W_s·W_q
@@ -12,9 +12,24 @@ point matrix streamed through in ``block_m``-row tiles, so VMEM holds
 O(seeds·n + block_m·n) floats regardless of m.  Compiled on a TPU
 target; interpret mode elsewhere (same kernel body, correctness only).
 
-Inputs are zero-padded to tile-friendly shapes by :func:`seed_rows`
-(zero rows/columns contribute nothing to the Gram product and padded
-output columns are sliced off), so callers can pass any (m, n).
+Two entry points share one kernel body:
+
+* :func:`multi_seed_rows` — the batched multi-seed call the lockstep
+  trial rounds of ``IncrementalClusterState.cluster_batch`` issue: one
+  pallas_call computes the rows of *all* unique seeds of a round.  The
+  grid is (m_tiles, k_tiles) with the seed-tile axis innermost, so each
+  point tile is streamed through VMEM **once** and reused across every
+  seed tile (consecutive grid steps with an identical block index skip
+  the re-copy); when ``block_k`` covers all seeds (the common case) the
+  whole seed block simply stays resident.
+* :func:`seed_rows` — the single-block legacy shape, now a thin wrapper
+  that delegates to :func:`multi_seed_rows` with ``block_k`` covering
+  the padded seed count, which reproduces the original single-tile
+  numerics exactly.
+
+Inputs are zero-padded to tile-friendly shapes (zero rows/columns
+contribute nothing to the Gram product and padded output columns are
+sliced off), so callers can pass any (m, n, k).
 """
 from __future__ import annotations
 
@@ -36,22 +51,30 @@ def _kernel(ws_ref, sqs_ref, w_ref, sq_ref, o_ref):
     o_ref[...] = jnp.maximum(d, 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
-def seed_rows(points, sq, idx, *, block_m: int = 512,
-              interpret: bool = False):
-    """Squared-distance rows of ``points[idx]`` against all points.
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_k", "interpret"))
+def multi_seed_rows(points, sq, idx, *, block_m: int = 512,
+                    block_k: int = 256, interpret: bool = False):
+    """Squared-distance rows of ``points[idx]`` against all points, for a
+    whole batch of seeds in one pallas_call.
 
     points : (m, n) float32 device array.
     sq     : (m,) row squared norms of ``points``.
-    idx    : (k,) int32 seed indices.
+    idx    : (k,) int32 seed indices (one lockstep round's unique seeds).
     Returns (k, m) float32, clamped at zero.
+
+    The grid is (m_tiles, k_tiles), seed tiles innermost: a point tile's
+    block index only changes with the outer step, so Pallas keeps it in
+    VMEM across the inner seed sweep — points are streamed exactly once
+    regardless of how many seed tiles there are.
     """
     m, n = points.shape
     k = idx.shape[0]
     seeds = jnp.take(points, idx, axis=0)
     sqs = jnp.take(sq, idx)
 
-    kp = _round_up(max(k, 8), 8)
+    bk = _round_up(max(min(block_k, k), 8), 8)
+    kp = _round_up(max(k, 8), bk)
     np_ = _round_up(max(n, 1), 128)
     bm = min(block_m, _round_up(max(m, 1), 128))
     mp = _round_up(max(m, 1), bm)
@@ -63,15 +86,36 @@ def seed_rows(points, sq, idx, *, block_m: int = 512,
 
     out = pl.pallas_call(
         _kernel,
-        grid=(mp // bm,),
+        grid=(mp // bm, kp // bk),
         in_specs=[
-            pl.BlockSpec((kp, np_), lambda i: (0, 0)),
-            pl.BlockSpec((kp, 1), lambda i: (0, 0)),
-            pl.BlockSpec((bm, np_), lambda i: (i, 0)),
-            pl.BlockSpec((1, bm), lambda i: (0, i)),
+            pl.BlockSpec((bk, np_), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, np_), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bm), lambda i, j: (0, i)),
         ],
-        out_specs=pl.BlockSpec((kp, bm), lambda i: (0, i)),
+        out_specs=pl.BlockSpec((bk, bm), lambda i, j: (j, i)),
         out_shape=jax.ShapeDtypeStruct((kp, mp), points.dtype),
         interpret=interpret,
     )(seeds_p, sqs_p, points_p, sq_p)
     return out[:k, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def seed_rows(points, sq, idx, *, block_m: int = 512,
+              interpret: bool = False):
+    """Squared-distance rows of ``points[idx]`` against all points.
+
+    points : (m, n) float32 device array.
+    sq     : (m,) row squared norms of ``points``.
+    idx    : (k,) int32 seed indices.
+    Returns (k, m) float32, clamped at zero.
+
+    Delegates to :func:`multi_seed_rows` with one seed tile covering the
+    padded seed count — the padded shapes, grid walk and per-tile dot are
+    exactly the original single-block kernel's, so existing callers see
+    bit-identical float32 output.
+    """
+    k = int(idx.shape[0])
+    return multi_seed_rows(points, sq, idx, block_m=block_m,
+                           block_k=_round_up(max(k, 8), 8),
+                           interpret=interpret)

@@ -681,15 +681,29 @@ def score_verdict(entry: CorpusEntry, verdict: Verdict) -> CorpusRunResult:
                            causes_found=frozenset(got_causes))
 
 
-def run_entry(entry: CorpusEntry, seed: int = 0) -> CorpusRunResult:
+def run_entry(entry: CorpusEntry, seed: int = 0,
+              analyzer_overrides: Optional[Dict[str, Any]] = None
+              ) -> CorpusRunResult:
     """Build the scenario and pipe it end-to-end through AutoAnalyzer.
 
     Entries asserting ``expect_onset_window`` additionally replay the
     collected trace through an :class:`OnlineAnalyzer` in tumbling
     windows — the same trace the whole-run verdict came from, so the
-    onset check costs no extra collection."""
+    onset check costs no extra collection.
+
+    ``analyzer_overrides`` merges on top of every entry's
+    ``analyzer_kw`` (e.g. ``{"distance_backend": "jax"}`` to gate the
+    accelerated clustering lane against the whole corpus).  Recovery
+    entries ignore it — their closed loop pins its own analyzer."""
     tree, collector = entry.build(seed)
+    kw = dict(entry.analyzer_kw)
+    if analyzer_overrides:
+        kw.update(analyzer_overrides)
     if entry.backend in ("chaos", "fleet"):
+        if analyzer_overrides:
+            # chaos/fleet harnesses build their analyzers lazily from
+            # collector.analyzer_kw at run_chaos() time
+            collector.analyzer_kw = tuple(sorted(kw.items()))
         # Chaos/fleet backends: the archetype attacks the pipeline (one
         # run, or one tenant of a multi-run fleet), recovery runs, and
         # the post-recovery flagged verdict (when the scenario plants
@@ -726,7 +740,7 @@ def run_entry(entry: CorpusEntry, seed: int = 0) -> CorpusRunResult:
         r.mitigation_window = summary["action_window"]
         r.clean_after = summary["clean_windows_after"]
         return r
-    analyzer = AutoAnalyzer(tree, **dict(entry.analyzer_kw))
+    analyzer = AutoAnalyzer(tree, **kw)
     result = analyzer.analyze_collector(collector)
     r = score_verdict(entry, result.verdict)
     r.collector = collector
@@ -734,7 +748,7 @@ def run_entry(entry: CorpusEntry, seed: int = 0) -> CorpusRunResult:
         online = OnlineAnalyzer(tree=tree,
                                 window_steps=entry.onset_window_steps,
                                 persist=entry.onset_persist,
-                                analyzer_kw=dict(entry.analyzer_kw))
+                                analyzer_kw=kw)
         online.process_trace(collector.last_trace)
         # Any-kind onset: with time-share-weighted severity banding the
         # pre-fault windows are genuinely clean (no standing
@@ -744,7 +758,9 @@ def run_entry(entry: CorpusEntry, seed: int = 0) -> CorpusRunResult:
     return r
 
 
-def run_entry_robust(entry: CorpusEntry, seed: int = 0) -> CorpusRunResult:
+def run_entry_robust(entry: CorpusEntry, seed: int = 0,
+                     analyzer_overrides: Optional[Dict[str, Any]] = None
+                     ) -> CorpusRunResult:
     """run_entry, with one fresh collection for wall-clock backends
     (runtime, train) that fail: collection on a loaded host can lose a
     measurement to a pathological scheduler burst.  The better of the two
@@ -753,11 +769,12 @@ def run_entry_robust(entry: CorpusEntry, seed: int = 0) -> CorpusRunResult:
     into one number.  Synthetic entries never retry — they are
     deterministic, so a failure is a real regression."""
     t0 = time.perf_counter()
-    r = run_entry(entry, seed=seed)
+    r = run_entry(entry, seed=seed, analyzer_overrides=analyzer_overrides)
     r.attempt_walls = (time.perf_counter() - t0,)
     if entry.backend in ("runtime", "train", "recovery") and not r.passed:
         t1 = time.perf_counter()
-        r2 = run_entry(entry, seed=seed + 1)
+        r2 = run_entry(entry, seed=seed + 1,
+                       analyzer_overrides=analyzer_overrides)
         walls = r.attempt_walls + (time.perf_counter() - t1,)
         if (r2.passed, r2.recall, r2.precision) >= \
                 (r.passed, r.recall, r.precision):

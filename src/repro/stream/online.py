@@ -192,7 +192,8 @@ class OnlineAnalyzer:
     def __init__(self, tree=None, window_steps: int = 4,
                  stride: Optional[int] = None, persist: int = 2,
                  analyzer_kw: Optional[Dict[str, Any]] = None,
-                 analyzer: Optional[AutoAnalyzer] = None):
+                 analyzer: Optional[AutoAnalyzer] = None,
+                 distance_backend: Optional[str] = None):
         if window_steps < 1:
             raise ValueError(f"window_steps must be >= 1, got {window_steps}")
         self.window_steps = window_steps
@@ -201,6 +202,13 @@ class OnlineAnalyzer:
             raise ValueError(f"stride must be >= 1, got {self.stride}")
         self.tree = tree
         self.analyzer_kw = dict(analyzer_kw or {})
+        # The accelerated-lane opt-in: overrides any distance_backend in
+        # analyzer_kw / header meta (None keeps their choice, ultimately
+        # the exact numpy default).  Every per-window analysis of this
+        # consumer then runs the device lockstep path, whose jitted round
+        # dispatches and donated buffers amortize across windows.
+        if distance_backend is not None:
+            self.analyzer_kw["distance_backend"] = distance_backend
         self._analyzer = analyzer
         self.log = WindowVerdictLog(persist=persist)
         # Most recent consumed source (SpooledTrace or RegionTrace), kept

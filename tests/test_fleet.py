@@ -251,6 +251,124 @@ class TestVerdictIndexKillSchedule:
         assert swept >= 8       # the sweep is a real schedule, not trivia
 
 
+class TestVerdictIndexRetention:
+    """Carry-over: bounded index growth.  Aggregates age out past the
+    ``retain_runs`` horizon and the journal collapses behind snapshots,
+    but idempotence keys are never dropped and live counts never move."""
+
+    def test_aged_out_runs_drop_from_report(self, tmp_path):
+        idx = VerdictIndex(str(tmp_path / "idx"), retain_runs=2)
+        feed(idx, sample_records())     # run-0, run-1, run-2 in order
+        rows = idx.report()
+        runs = {r for row in rows for r in row["runs"]}
+        assert runs == {"run-1", "run-2"}   # run-0 aged out
+        assert idx.evicted_runs == 1
+        top = rows[0]
+        assert top["n_runs"] == 2 and top["n_windows"] == 6
+
+    def test_eviction_survives_refeed(self, tmp_path):
+        """An evicted run's records stay dead on at-least-once redelivery
+        — the idempotence keys outlive the aggregates."""
+        idx = VerdictIndex(str(tmp_path / "idx"), retain_runs=2)
+        recs = sample_records()
+        feed(idx, recs)
+        before = idx.report()
+        feed(idx, (r for r in recs if r[0] == "run-0"))   # redeliver
+        assert idx.report() == before
+        # ...but a genuinely NEW window re-admits the run (fresh recency)
+        idx.record("run-0", make_verdict(), 100, 104)
+        runs = {r for row in idx.report() for r in row["runs"]}
+        assert "run-0" in runs and len(runs) == 2
+
+    def test_empty_fingerprints_disappear(self, tmp_path):
+        """A signature whose every contributing run ages out leaves the
+        report entirely."""
+        idx = VerdictIndex(str(tmp_path / "idx"), retain_runs=1)
+        # feed order: run-0 (3x va), run-1 (3x va), run-2 (3x va),
+        # run-1 (1x vb) — the trailing vb record re-admits run-1 and
+        # evicts run-2, so va loses its last contributor and vanishes
+        feed(idx, sample_records())
+        rows = idx.report()
+        assert len(rows) == 1
+        assert rows[0]["paths"] == ["ST/cr6"]
+        assert rows[0]["runs"] == {"run-1": 1}
+
+    def test_retained_state_replays_from_journal(self, tmp_path):
+        d = str(tmp_path / "idx")
+        idx = VerdictIndex(d, snapshot_every=1000, retain_runs=2)
+        feed(idx, sample_records())
+        rows = idx.report()
+        again = VerdictIndex(d, retain_runs=2)     # journal-only replay
+        assert again.report() == rows
+
+    def test_tightened_horizon_on_reopen_evicts(self, tmp_path):
+        d = str(tmp_path / "idx")
+        idx = VerdictIndex(d)
+        feed(idx, sample_records())
+        idx.close()
+        again = VerdictIndex(d, retain_runs=1)
+        runs = {r for row in again.report() for r in row["runs"]}
+        assert runs == {"run-1"}    # the last run to contribute a window
+
+    def test_journal_truncation_bounds_growth(self, tmp_path):
+        d = str(tmp_path / "idx")
+        idx = VerdictIndex(d, snapshot_every=2, journal_max_records=4)
+        feed(idx, sample_records())     # 10 records
+        rows = idx.report()
+        lines = [json.loads(ln) for ln in
+                 open(os.path.join(d, "journal.jsonl")) if ln.strip()]
+        assert "_base" in lines[0]
+        # marker + the tail past the last truncation, never all 10
+        assert len(lines) <= 1 + 4 + 2
+        again = VerdictIndex(d)
+        assert again.report() == rows
+        assert again.n_records == 10
+
+    def test_marker_past_snapshot_is_fatal(self, tmp_path):
+        """A truncation marker claiming records the snapshot does not
+        cover means data loss — refuse to open, never undercount."""
+        d = str(tmp_path / "idx")
+        idx = VerdictIndex(d, snapshot_every=1000)
+        feed(idx, sample_records())
+        del idx
+        with open(os.path.join(d, "journal.jsonl"), "w") as f:
+            f.write('{"_base": 99}\n')
+        with pytest.raises(ValueError, match="unrecoverable"):
+            VerdictIndex(d)
+
+    def test_kill_sweep_never_loses_live_counts(self, tmp_path):
+        """The tentpole-grade gate for retention: kill at every journal,
+        snapshot AND truncation boundary; reopen + re-feed must rebuild
+        exactly the retained report of an uninterrupted run."""
+        recs = sample_records()
+        kw = dict(snapshot_every=3, retain_runs=2, journal_max_records=4)
+        with FP.hits() as schedule:
+            clean = VerdictIndex(str(tmp_path / "clean"), **kw)
+            feed(clean, recs)
+            clean.close()
+        want = clean.report()
+        points = sorted(k for k in schedule if k.startswith("vindex."))
+        assert {"vindex.journal.truncate.written",
+                "vindex.journal.truncated"} <= set(points)
+        swept = 0
+        for point in points:
+            for nth in range(1, schedule[point] + 1):
+                d = str(tmp_path / f"{point}-{nth}")
+                with FP.armed(point, nth=nth):
+                    with pytest.raises(InjectedCrash):
+                        idx = VerdictIndex(d, **kw)
+                        feed(idx, recs)
+                        idx.close()
+                again = VerdictIndex(d, **kw)
+                feed(again, recs)
+                assert again.report() == want, f"{point}#{nth}"
+                again.close()
+                final = VerdictIndex(d, **kw)
+                assert final.report() == want, f"{point}#{nth} reopened"
+                swept += 1
+        assert swept >= 10
+
+
 # -- fleet ingest ---------------------------------------------------------
 
 
