@@ -35,6 +35,12 @@ tenant of an eight-run FleetIngest; the same ``chaos`` column then gates
 *isolation* — every unaffected run's windows must match a solo analysis
 of the same spool — and the detail line adds the shed/quarantined-run
 accounting.
+
+Serving-backend entries (``--backend serving``, docs/serving.md) drive
+deterministic traffic through the cost-model ServeEngine with per-step
+fault injection; the ``serve`` column reports completed requests against
+the entry's ServingTruth floor (got/want) — locating the bottleneck only
+counts if the engine also served the traffic.
 """
 from __future__ import annotations
 
@@ -94,6 +100,8 @@ def run_one(name: str, seed: int, train_trace_dir=None,
             "fallback_from": o.fallback_from,
             "restored_step": o.restored_step}),
         "chaos_failures": list(r.chaos_failures or ()),
+        "serve": (None if entry.serving is None
+                  else [r.completed, entry.serving.min_completed]),
         "missed": sorted(r.missed),
         "spurious": sorted(r.spurious),
         "causes_wanted": sorted(entry.truth.cause_attributes),
@@ -112,6 +120,7 @@ def _print_row(row: dict, wname: int) -> None:
           f"{row['precision']:6.2f} {row['recall']:6.2f} "
           f"{row['cause_recall']:6.2f} {fmt(row['onset']):>7s} "
           f"{fmt(row['recov']):>7s} {chaos:>7s} "
+          f"{fmt(row.get('serve')):>7s} "
           f"{sum(row['walls']):7.3f}  {status}")
     pad = " " * wname
     rec = row["recovery"]
@@ -151,7 +160,7 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend",
                     choices=("synthetic", "runtime", "train", "recovery",
-                             "chaos", "fleet"),
+                             "chaos", "fleet", "serving"),
                     default=None, help="restrict to one backend")
     ap.add_argument("--entry", action="append", default=None,
                     help="run only these entries (repeatable)")
@@ -220,12 +229,12 @@ def main(argv=None) -> int:
     wname = max(len(n) for n in names) + 2
     print(f"{'entry':{wname}s} {'kind':13s} {'prec':>6s} {'recall':>6s} "
           f"{'causes':>6s} {'onset':>7s} {'recov':>7s} {'chaos':>7s} "
-          f"{'wall_s':>7s}  status")
-    print("-" * (wname + 76))
+          f"{'serve':>7s} {'wall_s':>7s}  status")
+    print("-" * (wname + 84))
     failures = sum(1 for row in rows if not row["passed"])
     for row in rows:
         _print_row(row, wname)
-    print("-" * (wname + 76))
+    print("-" * (wname + 84))
     print(f"{len(rows) - failures}/{len(rows)} entries passed "
           f"(seed {args.seed})")
     return 1 if failures else 0

@@ -30,6 +30,14 @@ backends:
   writer, live consumer) and the entry is scored against a
   :class:`~repro.scenarios.chaos.ChaosTruth` — survival, quarantine,
   and bit-identical post-recovery verdicts on unaffected windows.
+* ``serving``  — the serving engine (repro/serve, docs/serving.md):
+  deterministic cost-model traffic runs through the real
+  batched-prefill/interleaved-decode scheduler, serving-only archetypes
+  (KV-cache thrash, interleave imbalance, hot-expert routing, long-tail
+  stragglers) are injected per engine step through the engine's step
+  hook — so a live spool tail sees the faulted samples in flight — and
+  the entry additionally asserts a :class:`ServingTruth` (the traffic
+  actually got served).  Bit-reproducible given the seed.
 
 ``evaluate_corpus`` scores every entry (precision/recall of located paths,
 cause recall) and backs both tests/test_fault_corpus.py and
@@ -51,6 +59,7 @@ from repro.core import (COMM_BYTES, FLOPS, HBM_INTENSITY, HOST_BYTES,
 from repro.stream import OnlineAnalyzer
 
 from . import faults as F
+from .traffic import saturated_sessions
 from .chaos import (ChaosTruth, CheckpointChaosCollector,
                     CorruptLatestCheckpoint, FleetAnalysisLagFlood,
                     FleetChaosCollector, FleetConcurrentKill,
@@ -84,6 +93,17 @@ class RecoveryTruth:
     kind: str                    # expected MitigationAction.kind
     mitigate_by_window: int      # action window index must be <= this
     clean_windows: int           # trailing clean windows required
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingTruth:
+    """Ground truth for the serving engine itself (backend "serving"):
+    locating the planted bottleneck only counts if the engine also did
+    its job — at least ``min_completed`` requests finished inside the
+    entry's step budget.  Deterministic scheduling makes the expected
+    count exact, so entries pin it tight."""
+
+    min_completed: int
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,6 +142,10 @@ class CorpusEntry:
     # accounting, clean-vs-chaos window verdict identity) must satisfy
     # this truth in addition to the regular verdict score.
     chaos: Optional[ChaosTruth] = None
+    # -- serving (repro/serve engine, docs/serving.md) ---------------------
+    # When set, the entry's collector drove traffic through the serving
+    # engine and must have completed at least this many requests.
+    serving: Optional[ServingTruth] = None
 
 
 CORPUS: Dict[str, CorpusEntry] = {}
@@ -174,6 +198,60 @@ class FaultedSyntheticCollector:
 
     def collect(self) -> RegionMetrics:
         return self.collect_trace().reduce()
+
+
+class ServingFaultCollector:
+    """Serving backend: deterministic cost-model traffic through the real
+    :class:`~repro.serve.ServeEngine` scheduler, with the serving fault
+    archetypes injected *per engine step* through the engine's step hook
+    rather than post-hoc — so a spool (or live tail) of the run carries
+    the faulted samples while the traffic is still in flight, and the
+    merged trace the whole-run verdict scores is the exact same data.
+    The serving archetypes are rng-free and schedule-conditioned, so
+    per-step injection is bit-identical to whole-trace injection.
+
+    Archetypes carrying an ``onset_step`` are gated on the *engine's*
+    global step here (a 1-step trace has no past), then applied with
+    their local onset zeroed."""
+
+    def __init__(self, scfg, traffic, fault_list: Tuple, seed: int,
+                 moe_experts: int = 0, top_k: int = 2, hot_expert: int = 0):
+        from repro.serve import CostModelBackend, ServeEngine
+        self.faults = tuple(fault_list)
+        self.seed = seed
+        backend = CostModelBackend(lanes=scfg.lanes, moe_experts=moe_experts,
+                                   top_k=top_k, hot_expert=hot_expert,
+                                   seed=seed)
+        self.tree = backend.tree
+        self.engine = ServeEngine(scfg, traffic, backend,
+                                  step_hook=self._inject_step)
+        self.last_trace: Optional[RegionTrace] = None
+
+    def _inject_step(self, engine, step: int, step_trace: RegionTrace
+                     ) -> None:
+        active = []
+        for f in self.faults:
+            onset = getattr(f, "onset_step", 0)
+            if step < onset:
+                continue
+            active.append(dataclasses.replace(f, onset_step=0)
+                          if onset else f)
+        if active:
+            F.inject_trace(self.tree, step_trace, tuple(active),
+                           seed=self.seed)
+
+    def collect_trace(self) -> RegionTrace:
+        if self.engine.trace is None:
+            self.engine.run()
+        self.last_trace = self.engine.trace
+        return self.last_trace
+
+    def collect(self) -> RegionMetrics:
+        return self.collect_trace().reduce()
+
+    @property
+    def completed(self) -> int:
+        return self.engine.completed
 
 
 class RuntimeFaultCollector:
@@ -369,6 +447,28 @@ def _model_synthetic(arch: str, *fault_list):
         tree, behaviors, _ = model_region_tree(arch)
         return tree, FaultedSyntheticCollector(tree, behaviors,
                                                tuple(fault_list), seed)
+    return build
+
+
+def _serving(*fault_list, traffic: Callable[[], List], lanes: int = 4,
+             max_len: int = 24, chunk: int = 8, steps: int = 32,
+             moe_experts: int = 0, top_k: int = 2, hot_expert: int = 0,
+             analyzer_kw: Tuple[Tuple[str, Any], ...] = ()):
+    """Builder for the serving backend: rng-free corpus traffic
+    (``traffic`` is a zero-arg callable so each build gets fresh Request
+    objects) through the cost-model ServeEngine, with per-step fault
+    injection.  ``analyzer_kw`` rides in the trace header so an offline
+    replay of a saved/spooled serving artifact resolves the exact same
+    analyzer configuration (the train-artifact convention)."""
+    def build(seed: int):
+        from repro.serve import ServeConfig
+        scfg = ServeConfig(lanes=lanes, max_len=max_len,
+                           prefill_chunk=chunk, max_steps=steps,
+                           trace_meta={"analyzer_kw": dict(analyzer_kw)})
+        collector = ServingFaultCollector(
+            scfg, traffic(), tuple(fault_list), seed,
+            moe_experts=moe_experts, top_k=top_k, hot_expert=hot_expert)
+        return collector.tree, collector
     return build
 
 
@@ -605,6 +705,8 @@ class CorpusRunResult:
     # -- chaos accounting (entries with ChaosTruth) ------------------------
     chaos_outcome: Any = None                # full ChaosOutcome
     chaos_failures: Optional[List[str]] = None  # ChaosTruth violations
+    # -- serving accounting (entries with ServingTruth) --------------------
+    completed: Optional[int] = None          # requests the engine finished
 
     @property
     def chaos_ok(self) -> Optional[bool]:
@@ -626,6 +728,14 @@ class CorpusRunResult:
                 and (self.clean_after or 0) >= want.clean_windows)
 
     @property
+    def served(self) -> Optional[bool]:
+        """None for non-serving entries; else whether the engine met the
+        entry's completed-request floor."""
+        if self.entry.serving is None:
+            return None
+        return (self.completed or 0) >= self.entry.serving.min_completed
+
+    @property
     def passed(self) -> bool:
         return (self.recall == 1.0 and self.cause_recall == 1.0
                 and self.precision >= self.entry.min_precision
@@ -633,7 +743,8 @@ class CorpusRunResult:
                      or self.onset_window
                      == self.entry.expect_onset_window)
                 and self.recovered
-                and self.chaos_ok is not False)
+                and self.chaos_ok is not False
+                and self.served is not False)
 
 
 def _related(a: str, b: str) -> bool:
@@ -744,6 +855,8 @@ def run_entry(entry: CorpusEntry, seed: int = 0,
     result = analyzer.analyze_collector(collector)
     r = score_verdict(entry, result.verdict)
     r.collector = collector
+    if entry.serving is not None:
+        r.completed = getattr(collector, "completed", None)
     if entry.expect_onset_window is not None:
         online = OnlineAnalyzer(tree=tree,
                                 window_steps=entry.onset_window_steps,
@@ -1324,4 +1437,101 @@ register_entry(CorpusEntry(
     build=_fleet_spool(FleetAnalysisLagFlood()),
     truth=_CHAOS_ST_TRUTH,
     chaos=ChaosTruth(min_shed=3, min_degraded=3, min_matched_windows=28),
+))
+
+# -- serving: the batched prefill/decode engine (repro/serve) --------------
+# Corpus traffic is saturated synchronized sessions: every lane runs the
+# same request shape back to back, so the clean baseline is flat across
+# lanes and cycle-periodic across steps by construction — the balanced-
+# behaviours discipline, realized by scheduling.  docs/serving.md.
+
+# The interleave archetype stalls pure wall (CPU idles while the batcher
+# serves someone else's prefill), like the wait-style train archetypes.
+_SERVE_WALL_KW = (("similarity_metric", WALL_TIME),)
+
+register_entry(CorpusEntry(
+    name="serving/kv-cache-thrash",
+    app="serve", backend="serving",
+    description="Every lane's KV cache crosses 50% occupancy over the "
+                "back half of each request cycle: appends re-stream "
+                "cache lines through HBM (5x wall, 10x bytes) — a "
+                "memory-bound disparity at serve/kv_append, cause "
+                "hbm_intensity",
+    build=_serving(F.KVCacheThrash(),
+                   traffic=lambda: saturated_sessions(4, 4)),
+    truth=GroundTruth(kind="disparity",
+                      bottleneck_paths=frozenset({"serve/kv_append"}),
+                      cause_attributes=frozenset({HBM_INTENSITY})),
+    serving=ServingTruth(min_completed=16),
+))
+
+register_entry(CorpusEntry(
+    name="serving/kv-thrash-onset",
+    app="serve", backend="serving",
+    description="Same KV-cache thrash, switching on at engine step 16 of "
+                "32 (a hot neighbor landing on the host): the online "
+                "replay must localize onset to window 2 of the 8-step "
+                "windows while the whole-run verdict still locates "
+                "serve/kv_append",
+    build=_serving(F.KVCacheThrash(onset_step=16),
+                   traffic=lambda: saturated_sessions(4, 4)),
+    truth=GroundTruth(kind="disparity",
+                      bottleneck_paths=frozenset({"serve/kv_append"}),
+                      cause_attributes=frozenset({HBM_INTENSITY})),
+    serving=ServingTruth(min_completed=16),
+    expect_onset_window=2, onset_window_steps=8, onset_persist=2,
+))
+
+register_entry(CorpusEntry(
+    name="serving/interleave-imbalance",
+    app="serve", backend="serving",
+    description="Staggered sessions de-synchronize lane phases; an "
+                "unfair batcher lets co-scheduled prefill chunks starve "
+                "lane 3's decode (pure wall stall, CPU untouched) — one "
+                "dissimilar lane at serve/decode under the wall-time "
+                "similarity metric",
+    build=_serving(F.InterleaveImbalance(victim=3, stall=0.02),
+                   traffic=lambda: saturated_sessions(4, 8, stagger=1),
+                   steps=64, analyzer_kw=_SERVE_WALL_KW),
+    truth=GroundTruth(kind="dissimilarity",
+                      bottleneck_paths=frozenset({"serve/decode"})),
+    analyzer_kw=_SERVE_WALL_KW,
+    serving=ServingTruth(min_completed=29),
+))
+
+register_entry(CorpusEntry(
+    name="serving/hot-expert-routing",
+    app="serve", backend="serving",
+    description="Hot-prompt repetition routes 85% of MoE decode mass to "
+                "expert 0 (17x sibling FLOPS, emergent from the traffic "
+                "mix alone); its congested queue triples wall where the "
+                "skew holds — a disparity localized to "
+                "serve/moe/expert_0, cause flops",
+    build=_serving(F.HotExpertRouting(),
+                   traffic=lambda: saturated_sessions(4, 4, hot=True),
+                   moe_experts=4),
+    truth=GroundTruth(kind="disparity",
+                      bottleneck_paths=frozenset({"serve/moe/expert_0"}),
+                      cause_attributes=frozenset({FLOPS})),
+    serving=ServingTruth(min_completed=16),
+))
+
+register_entry(CorpusEntry(
+    name="serving/long-tail-prompt-straggler",
+    app="serve", backend="serving",
+    description="Lane 3 serves the long tail (64-token prompts, 24-token "
+                "generations — token rates match the short lanes, only "
+                "the quadratic prefill cost differs) and its deep prefill "
+                "chunks blow the fast path (4x work past 15 ms/chunk): "
+                "one dissimilar lane whose extra FLOPS sit in "
+                "serve/prefill",
+    build=_serving(F.LongTailPromptStraggler(),
+                   traffic=lambda: saturated_sessions(
+                       4, 8, tail_lane=3, tail_prompt_len=64,
+                       tail_gen_len=24),
+                   max_len=96, steps=64),
+    truth=GroundTruth(kind="dissimilarity",
+                      bottleneck_paths=frozenset({"serve/prefill"}),
+                      cause_attributes=frozenset({FLOPS})),
+    serving=ServingTruth(min_completed=26),
 ))

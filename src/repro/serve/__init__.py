@@ -1,0 +1,26 @@
+"""Serving engine: batched prefill + interleaved decode, instrumented
+with a serving region tree (docs/serving.md).
+
+``JitBackend`` (the real jitted model) lives in ``repro.serve.runtime``
+and is loaded lazily: it pulls in the model stack and the traffic
+module, which the deterministic cost-model path (what the corpus and
+most tests use) never needs.
+"""
+from .cost import CostModelBackend, ServeCostModel, serving_analyzer_meta
+from .engine import (DECODE, KV_APPEND, MOE, PREFILL, SAMPLE, LaneEvent,
+                     RequestRecord, ServeConfig, ServeEngine, ServeScheduler,
+                     serve_region_tree)
+
+__all__ = [
+    "CostModelBackend", "ServeCostModel", "serving_analyzer_meta",
+    "DECODE", "KV_APPEND", "MOE", "PREFILL", "SAMPLE", "LaneEvent",
+    "RequestRecord", "ServeConfig", "ServeEngine", "ServeScheduler",
+    "serve_region_tree", "JitBackend", "supports_chunk",
+]
+
+
+def __getattr__(name):
+    if name in ("JitBackend", "supports_chunk"):
+        from . import runtime
+        return getattr(runtime, name)
+    raise AttributeError(name)

@@ -1,0 +1,129 @@
+"""Deterministic serving traffic generation (repro.scenarios.traffic):
+same (config, seed) -> bit-identical request streams, bucketing-by-length,
+hot-prompt literal repetition, sticky sessions, and the rng-free
+saturated-session corpus generator."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.scenarios.traffic import (Request, TrafficConfig,
+                                     generate_traffic, prompt_tokens,
+                                     saturated_sessions)
+
+FULL_KNOBS = TrafficConfig(n_requests=48, arrival_rate=1.5, burstiness=0.3,
+                           length_buckets=(8, 16, 32, 64),
+                           length_mix=(0.45, 0.35, 0.15, 0.05),
+                           gen_len=8, gen_jitter=3, hot_fraction=0.25,
+                           hot_bucket=1, sessions=4, vocab=128)
+
+
+class TestGenerateTraffic:
+    def test_same_seed_bit_identical(self):
+        a = generate_traffic(FULL_KNOBS, seed=3)
+        b = generate_traffic(FULL_KNOBS, seed=3)
+        assert [dataclasses.astuple(r) for r in a] == \
+               [dataclasses.astuple(r) for r in b]
+
+    def test_different_seed_differs(self):
+        a = generate_traffic(FULL_KNOBS, seed=3)
+        b = generate_traffic(FULL_KNOBS, seed=4)
+        assert [dataclasses.astuple(r) for r in a] != \
+               [dataclasses.astuple(r) for r in b]
+
+    def test_bucketing_pads_raw_length_up(self):
+        buckets = FULL_KNOBS.length_buckets
+        for r in generate_traffic(FULL_KNOBS, seed=0):
+            assert r.prompt_len in buckets
+            b = buckets.index(r.prompt_len)
+            lo = 1 if b == 0 else buckets[b - 1] + 1
+            assert lo <= r.raw_len <= r.prompt_len
+
+    def test_sorted_by_arrival_then_rid(self):
+        reqs = generate_traffic(FULL_KNOBS, seed=0)
+        keys = [(r.arrival_step, r.rid) for r in reqs]
+        assert keys == sorted(keys)
+        assert all(r.arrival_step >= 0 for r in reqs)
+
+    def test_hot_requests_replay_one_literal_prompt(self):
+        cfg = dataclasses.replace(FULL_KNOBS, hot_fraction=1.0)
+        reqs = generate_traffic(cfg, seed=0)
+        assert all(r.hot and r.prompt_id == -1 for r in reqs)
+        # every hot request lives in the hot bucket, fully padded
+        assert {r.prompt_len for r in reqs} == \
+               {cfg.length_buckets[cfg.hot_bucket]}
+        toks = [prompt_tokens(r, cfg.vocab, seed=0) for r in reqs]
+        for t in toks[1:]:
+            np.testing.assert_array_equal(toks[0], t)
+
+    def test_cold_requests_have_distinct_prompts(self):
+        cfg = dataclasses.replace(FULL_KNOBS, hot_fraction=0.0,
+                                  hot_bucket=0, length_buckets=(16,),
+                                  length_mix=(1.0,))
+        reqs = generate_traffic(cfg, seed=0)
+        assert sorted(r.prompt_id for r in reqs) == \
+               list(range(cfg.n_requests))
+        a, b = (prompt_tokens(r, cfg.vocab, seed=0) for r in reqs[:2])
+        assert not np.array_equal(a, b)
+
+    def test_prompt_tokens_shape_and_range(self):
+        r = Request(rid=0, arrival_step=0, prompt_len=16, gen_len=4)
+        t = prompt_tokens(r, vocab=32, seed=1)
+        assert t.shape == (1, 16) and t.dtype == np.int32
+        assert t.min() >= 0 and t.max() < 32
+
+    def test_sessions_round_robin(self):
+        cfg = dataclasses.replace(FULL_KNOBS, sessions=3)
+        for r in generate_traffic(cfg, seed=0):
+            assert r.session == r.rid % 3
+        cfg0 = dataclasses.replace(FULL_KNOBS, sessions=0)
+        assert all(r.session is None for r in generate_traffic(cfg0, seed=0))
+
+    def test_gen_jitter_stays_in_band(self):
+        cfg = dataclasses.replace(FULL_KNOBS, gen_len=4, gen_jitter=3)
+        for r in generate_traffic(cfg, seed=0):
+            assert 1 <= r.gen_len <= 7
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            TrafficConfig(length_buckets=(8, 16), length_mix=(1.0,))
+        with pytest.raises(ValueError):
+            TrafficConfig(length_buckets=(16, 8), length_mix=(0.5, 0.5))
+        with pytest.raises(ValueError):
+            TrafficConfig(hot_bucket=9)
+        with pytest.raises(ValueError):
+            Request(rid=0, arrival_step=0, prompt_len=0, gen_len=4)
+
+
+class TestSaturatedSessions:
+    def test_rng_free_and_shaped(self):
+        a = saturated_sessions(4, 4)
+        b = saturated_sessions(4, 4)
+        assert [dataclasses.astuple(r) for r in a] == \
+               [dataclasses.astuple(r) for r in b]
+        assert len(a) == 16
+        assert all(r.arrival_step == 0 and r.session is not None for r in a)
+        # four back-to-back requests per lane session
+        for lane in range(4):
+            assert sum(1 for r in a if r.session == lane) == 4
+
+    def test_stagger_offsets_lane_phases(self):
+        reqs = saturated_sessions(4, 2, stagger=1)
+        for r in reqs:
+            assert r.arrival_step == r.session
+
+    def test_tail_lane_shapes(self):
+        reqs = saturated_sessions(4, 2, tail_lane=3, tail_prompt_len=64,
+                                  tail_gen_len=24)
+        for r in reqs:
+            if r.session == 3:
+                assert (r.prompt_len, r.gen_len) == (64, 24)
+            else:
+                assert (r.prompt_len, r.gen_len) == (16, 6)
+
+    def test_hot_flag(self):
+        reqs = saturated_sessions(2, 2, hot=True)
+        assert all(r.hot and r.prompt_id == -1 for r in reqs)
+        toks = [prompt_tokens(r, 64, seed=0) for r in reqs]
+        for t in toks[1:]:
+            np.testing.assert_array_equal(toks[0], t)
